@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-figure benchmarks (simulated microsecond
+clock — see repro/core/costmodel.py for the measured constants)."""
+
+from __future__ import annotations
+
+import sys
+from typing import Callable, Generator, List, Tuple
+
+import numpy as np
+
+from repro.core import (Fabric, LiteKernel, MetaServer, VerbsProcess,
+                        WorkRequest, make_cluster)
+
+Row = Tuple[str, float, str]       # (name, us_per_call, derived)
+
+
+def concurrent_latency(env, make_proc: Callable[[int], Generator],
+                       n_clients: int) -> Tuple[float, float]:
+    """Run n client processes concurrently; return (mean_us, tput_per_s).
+
+    Each process generator must return its own latency in us.
+    """
+    procs = [env.process(make_proc(i), f"cli{i}") for i in range(n_clients)]
+    t0 = env.now
+    env.run()
+    lats = [p.value for p in procs if p.triggered]
+    span = env.now - t0
+    tput = n_clients / (span / 1e6) if span > 0 else float("inf")
+    return float(np.mean(lats)), tput
+
+
+def setup_rw_pair(cluster, src="n0", dst="n1", nbytes=4096):
+    """Register an MR on both ends; returns (mr_local, mr_remote)."""
+    m_src = cluster.module(src)
+    m_dst = cluster.module(dst)
+    out = {}
+
+    def setup():
+        out["mr_r"] = yield from m_dst.sys_qreg_mr(nbytes)
+        out["mr_l"] = yield from m_src.sys_qreg_mr(nbytes)
+        return True
+
+    cluster.env.run_process(setup(), "setup")
+    return out["mr_l"], out["mr_r"]

@@ -1,0 +1,150 @@
+"""Roofline analysis from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+TPU v5e constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link
+ICI. The dry-run records per-device HLO FLOPs / bytes (exact, via the
+depth-variant extrapolation) and per-device collective link-bytes (parsed
+from the optimized HLO with ring factors).
+
+    compute_term    = flops_per_device   / 197e12         [s]
+    memory_term     = bytes_per_device   / 819e9          [s]
+    collective_term = link_bytes_per_dev / 50e9           [s]
+
+Per the §Roofline method these are *per-device* quantities, equivalent to
+the global-totals-over-(chips x peak) form since the program is SPMD.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+CELL_SECONDS = {"train": None}     # no wall target; the terms ARE the result
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """MODEL_FLOPS (global): the standard MFU reference.
+
+    train:   6*(N_active_nonembed + d*V_logits)*D + attention term
+    serving: 2*(...)*D
+    Attention term (causal): 6*L*H*d_head*S*D train, 2*... serving
+    (decode D=batch tokens attending S cache entries).
+    """
+    from repro.configs import get_config
+    from repro.models import count_params_config
+    cfg = get_config(arch)
+    n_active = count_params_config(cfg, active_only=True)
+    n_embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_body = max(n_active - n_embed, 0)
+    logits = cfg.d_model * cfg.vocab
+    tokens = shape["tokens"]
+    mult = 6.0 if shape["kind"] == "train" else 2.0
+    # prefill computes logits only for the LAST position of each sequence
+    logit_tokens = tokens if shape["kind"] != "prefill" \
+        else shape.get("batch", tokens)
+    base = mult * n_body * tokens + mult * logits * logit_tokens
+    # attention score/value FLOPs
+    if cfg.family in ("dense", "moe", "encdec"):
+        n_attn_layers = cfg.n_layers
+        ctx = shape.get("ctx", 0)
+        hq, hd = cfg.n_heads, cfg.d_head
+        if cfg.mla:
+            hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        if shape["kind"] == "decode":
+            base += mult * n_attn_layers * hq * hd * ctx * tokens
+        else:
+            seq = shape.get("seq", 0)
+            base += mult * n_attn_layers * hq * hd * (seq / 2) * tokens
+    elif cfg.family == "hybrid":
+        n_shared = cfg.n_layers // cfg.attn_every
+        ctx = shape.get("ctx", 0)
+        if shape["kind"] == "decode":
+            base += mult * n_shared * cfg.n_heads * cfg.d_head * ctx \
+                * tokens
+        else:
+            seq = shape.get("seq", 0)
+            base += mult * n_shared * cfg.n_heads * cfg.d_head \
+                * (seq / 2) * tokens
+    return base
+
+
+SHAPE_TOKENS = {
+    "train_4k": {"kind": "train", "tokens": 4096 * 256, "seq": 4096},
+    "prefill_32k": {"kind": "prefill", "tokens": 32768 * 32,
+                    "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "tokens": 128, "ctx": 32768},
+    "long_500k": {"kind": "decode", "tokens": 1, "ctx": 524288},
+}
+
+
+def analyze_cell(rec: dict, chips: int = 256) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    exact = rec.get("exact")
+    flops = (exact or rec).get("flops_per_device", 0.0)
+    bts = (exact or rec).get("bytes_per_device", 0.0)
+    link = (exact["link_bytes_per_device"] if exact
+            else rec["collectives"]["link_bytes_per_device"])
+    # the grad-accum microbatch loop is a while loop: its body is counted
+    # once by cost_analysis -> scale train cells by cfg.grad_accum
+    if rec["shape"] == "train_4k":
+        from repro.configs import get_config
+        accum = max(get_config(rec["arch"]).grad_accum, 1)
+        flops *= accum
+        bts *= accum
+        link *= accum
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bts / HBM_BW
+    coll_t = link / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_t}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], SHAPE_TOKENS[rec["shape"]])
+    useful = mf / (flops * chips) if flops else 0.0
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_t, "memory_s": memory_t,
+        "collective_s": coll_t, "dominant": dom,
+        "model_flops": mf, "hlo_flops_global": flops * chips,
+        "useful_ratio": useful,
+        "roofline_fraction": compute_t / bound if bound else 0.0,
+        "exact": exact is not None,
+    }
+
+
+def load_all(dirname: str = "results/dryrun") -> List[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        for rec in json.load(open(f)):
+            if rec.get("mesh") == "16x16" and rec.get("status") == "ok":
+                r = analyze_cell(rec)
+                if r:
+                    rows.append(r)
+    return rows
+
+
+def bench_roofline() -> List:
+    """Emit one CSV row per baselined cell (the §Roofline table source)."""
+    rows = []
+    for r in load_all():
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        derived = (f"comp={r['compute_s']*1e3:.2f}ms "
+                   f"mem={r['memory_s']*1e3:.2f}ms "
+                   f"coll={r['collective_s']*1e3:.2f}ms "
+                   f"dom={r['dominant']} "
+                   f"useful={r['useful_ratio']:.2f} "
+                   f"roofline_frac={r['roofline_fraction']:.2f}")
+        rows.append((name, us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in bench_roofline():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table/figure + the roofline
+table from the dry-run artifacts. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig8
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench function names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.paper_figs import ALL_BENCHES
+
+    benches = list(ALL_BENCHES)
+    if not args.skip_roofline:
+        from benchmarks.roofline import bench_roofline
+        benches.append(bench_roofline)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception as e:                           # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},nan,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,769 @@
+"""KRCoreModule: the per-node 'kernel module' (paper Fig 6, §4).
+
+Hosts the per-CPU hybrid QP pools, the DC target, the DCCache/MRStore, the
+meta-server clients, and implements the system-call surface of Table 1:
+
+    queue / qconnect / qbind / qreg_mr          (control path, socket-like)
+    qpush / qpop / qpush_recv / qpop_msgs       (data path, verbs-like)
+
+plus the zero-copy protocol (§4.5) and the DC<->RC transfer protocol (§4.6).
+
+All blocking operations are DES generators (yield sim events). A synchronous
+facade for single-actor usage lives in :mod:`repro.core.api`.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from typing import Dict, Generator, List, Optional, Tuple
+
+import numpy as np
+
+from .costmodel import CostModel, DEFAULT
+from .fabric import Fabric, MemoryRegion, MRError, Node
+from .meta import (SLOT, DCCache, DCTMeta, DrTMKV, KVClient, MetaServer,
+                   MRStore, ValidMRStore, fnv1a)
+from .pool import HybridQPPool
+from .qp import (QP, Completion, QPError, QPState, QPType, RecvBuffer,
+                 WorkRequest, connect_rc_pair)
+from .sim import Store
+from .virtqueue import (NOT_READY, READY, CompEntry, PolledMsg, RecvEntry,
+                        VirtQueue, decode_wr_id, encode_wr_id)
+
+KERNEL_RECV_SLOTS = 64
+
+
+class KRCoreError(Exception):
+    pass
+
+
+class KRCoreModule:
+    """One node's KRCORE instance."""
+
+    def __init__(self, node: Node, meta_servers: List[MetaServer],
+                 n_pools: int = 1, n_dcqps: int = 1, rc_cap: int = 32,
+                 promote_threshold: int = 8):
+        self.node = node
+        self.env = node.env
+        self.fabric: Fabric = node.fabric
+        self.cm: CostModel = node.cm
+        self.meta_servers = meta_servers
+        self.promote_threshold = promote_threshold
+        self.pools = [HybridQPPool(node, cpu, n_dcqps=n_dcqps, rc_cap=rc_cap)
+                      for cpu in range(n_pools)]
+        self.dccache = DCCache()
+        self.mrstore = MRStore(self.env, self.cm.mr_flush_period_us)
+        self.validmr = ValidMRStore(node)
+        self.vqs: Dict[int, VirtQueue] = {}
+        self.ports: Dict[int, VirtQueue] = {}
+        self.dc_target: Optional[QP] = None
+        self.dct_key: int = 0
+        self.ud: Optional[QP] = None
+        self.flush_mr: Optional[MemoryRegion] = None
+        self._meta_clients: List[KVClient] = []
+        self._server_qps: List[QP] = []
+        self._kernel_slab = 0
+        self._kernel_slab_mr: Optional[MemoryRegion] = None
+        self._slab_slots: deque = deque()
+        self._scratch_mr: Optional[MemoryRegion] = None
+        # kernel-staged small messages per vq id, waiting for a user buffer
+        self._staged: Dict[int, deque] = {}
+        # zero-copy descriptors waiting for a user buffer
+        self._staged_zc: Dict[int, deque] = {}
+        self._promotions_inflight: set = set()
+        self.booted = False
+        # stats
+        self.stat_promotions = 0
+        self.stat_transfers = 0
+        self.stat_zc_reads = 0
+
+    # ===================================================== module load/boot
+    def boot(self) -> Generator:
+        """Module load: static initialization of all shared state (§4.2).
+
+        This cost is paid once per node at boot, *never* on an application
+        control path — the whole point of the paper.
+        """
+        node, cm = self.node, self.cm
+        # kernel message slab (pre-posted two-sided receive buffers)
+        slab_bytes = KERNEL_RECV_SLOTS * cm.kernel_msg_buf_bytes * 4
+        self._kernel_slab = node.alloc(slab_bytes)
+        self._kernel_slab_mr = node.reg_mr(self._kernel_slab, slab_bytes)
+        for i in range(KERNEL_RECV_SLOTS * 4):
+            self._slab_slots.append(i * cm.kernel_msg_buf_bytes)
+        # flush region for the transfer protocol's fake READ (§4.6)
+        flush_addr = node.alloc(64)
+        self.flush_mr = node.reg_mr(flush_addr, 64)
+        # scratch for meta lookups / internal reads
+        scratch = node.alloc(4096)
+        self._scratch_mr = node.reg_mr(scratch, 4096)
+        # DC target (one per node): receives all DC traffic
+        self.dc_target = QP(node, QPType.DC)
+        yield from self.dc_target.create()
+        yield from self.dc_target.configure()
+        self.dct_key = (hash(node.name) & 0x7FFFFFFF) or 1
+        self._watch_server_qp(self.dc_target)
+        # UD QP for control messages
+        self.ud = QP(node, QPType.UD)
+        yield from self.ud.create()
+        yield from self.ud.configure()
+        self._watch_server_qp(self.ud)
+        # per-CPU pools: static DCQPs
+        for pool in self.pools:
+            yield from pool.boot()
+        # register DCT metadata (+ flush MR info) at every meta server
+        meta = DCTMeta(self.node.id, self.dc_target.qpn, self.dct_key)
+        payload = meta.pack() + np.frombuffer(
+            np.array([self.flush_mr.rkey], dtype=np.uint32).tobytes(),
+            dtype=np.uint8).tobytes()
+        for ms in self.meta_servers:
+            ms.kv.put(node.name.encode(), payload)
+        # pre-connect an RCQP to each (nearby) meta server (§4.2)
+        for ms in self.meta_servers:
+            qa, _qb = yield from connect_rc_pair(self.fabric, node, ms.node)
+            self._meta_clients.append(
+                KVClient(qa, ms.kv, self._scratch_mr, 0))
+        self.booted = True
+
+    def _watch_server_qp(self, qp: QP) -> None:
+        """Pre-post kernel buffers + start the receive pump for ``qp``."""
+        self._server_qps.append(qp)
+        for _ in range(KERNEL_RECV_SLOTS):
+            self._post_kernel_recv(qp)
+        self.env.process(self._recv_pump(qp), f"{self.node.name}.pump{qp.qpn}")
+
+    def _post_kernel_recv(self, qp: QP) -> None:
+        if not self._slab_slots:
+            return
+        off = self._slab_slots.popleft()
+        qp.post_recv(RecvBuffer(self._kernel_slab_mr, off,
+                                self.cm.kernel_msg_buf_bytes, wr_id=off))
+
+    # ===================================================== control path
+    def sys_queue(self, cpu: int = 0) -> Generator:
+        """queue(): allocate a VirtQueue (Table 2: 0.36us)."""
+        yield self.env.timeout(self.cm.queue_us)
+        vq = VirtQueue(owner_cpu=cpu)
+        self.vqs[vq.id] = vq
+        return vq.id
+
+    def sys_qconnect(self, qd: int, addr: str,
+                     port: Optional[int] = None) -> Generator:
+        """qconnect(): Algorithm 1, VirtQueueConnect. No QP is created."""
+        vq = self._vq(qd)
+        pool = self.pools[vq.owner_cpu % len(self.pools)]
+        kind, qp = pool.select(addr)
+        vq.remote = addr
+        vq.remote_port = port
+        if kind == "RC":
+            yield self.env.timeout(self.cm.qconnect_rc_hit_us)
+            vq.qp, vq.kind = qp, "RC"
+            vq.remote_qpn = qp.peer[1]
+            self._maybe_promote(pool, addr)
+            return 0
+        meta = self.dccache.get(addr)
+        if meta is not None:
+            yield self.env.timeout(self.cm.qconnect_dc_cached_us)
+        else:
+            # worst case: one-sided lookup at a meta server (Fig 8 path)
+            yield self.env.timeout(self.cm.qconnect_dc_cached_us)
+            meta = yield from self._meta_lookup(addr)
+            if meta is None:
+                return -1
+            self.dccache.put(addr, meta)
+        vq.qp, vq.kind = qp, "DC"
+        vq.dct_meta = meta
+        vq.remote_qpn = meta.dct_num
+        self._maybe_promote(pool, addr)
+        return 0
+
+    def sys_qbind(self, qd: int, port: int) -> Generator:
+        yield self.env.timeout(self.cm.qbind_us)
+        vq = self._vq(qd)
+        if port in self.ports:
+            return -1
+        vq.bound_port = port
+        self.ports[port] = vq
+        return 0
+
+    def sys_qreg_mr(self, nbytes: int) -> Generator:
+        """qreg_mr(): allocate + register ``nbytes`` of user memory.
+
+        Kernel-space registration reuses the shared driver context, so the
+        cost is Table-2-scale (1.4us for 4MB), not the 50us+ user-space cost.
+        """
+        frac = max(nbytes / (4 * 1024 * 1024), 0.1)
+        yield self.env.timeout(self.cm.qreg_mr_4mb_us * min(frac, 16.0))
+        addr = self.node.alloc(nbytes)
+        mr = self.node.reg_mr(addr, nbytes)
+        self.validmr.add(mr)
+        return mr
+
+    def sys_qdereg_mr(self, mr: MemoryRegion) -> Generator:
+        """Deregister: remove from ValidMR now, release after a flush period
+        so stale MRStore entries elsewhere can never outlive it (§4.2)."""
+        self.validmr.remove(mr.rkey)
+        yield self.env.timeout(self.cm.mr_flush_period_us)
+        self.node.dereg_mr(mr)
+        return 0
+
+    def _meta_lookup(self, addr: str) -> Generator:
+        """Query meta servers in order; fail over to the next replica when
+        one is down (§4.2: "each node keeps multiple connections to
+        different meta servers"). All-replicas-dead falls back to an RPC
+        to the target node itself (the rare path)."""
+        for client in self._meta_clients:
+            if not client.server.node.alive:
+                continue
+            val = yield from client.lookup(addr.encode())
+            if val is not None:
+                return DCTMeta.unpack(val)
+        # RPC fallback: ask the target's kernel directly over UD
+        target = self.fabric.node(addr)
+        if target.alive and hasattr(target, "krcore"):
+            tm: KRCoreModule = target.krcore            # type: ignore
+            yield self.env.timeout(self.cm.rpc_handler_us
+                                   + 2 * self.cm.wire_us)
+            if tm.booted:
+                return DCTMeta(target.id, tm.dc_target.qpn, tm.dct_key)
+        return None
+
+    # -------------------------------------------- kernel-internal transfers
+    def _internal_vq(self, addr: str) -> Generator:
+        """A kernel-owned VirtQueue to ``addr`` (cached), for module-to-
+        module one-sided reads (ValidMR checks, zero-copy pulls)."""
+        cache = getattr(self, "_ivqs", None)
+        if cache is None:
+            cache = self._ivqs = {}
+        if addr in cache:
+            return cache[addr]
+        vq = VirtQueue(owner_cpu=0)
+        self.vqs[vq.id] = vq
+        pool = self.pools[0]
+        kind, qp = pool.select(addr)
+        vq.remote, vq.qp, vq.kind = addr, qp, kind
+        if kind == "RC":
+            vq.remote_qpn = qp.peer[1]
+        else:
+            meta = self.dccache.get(addr)
+            if meta is None:
+                meta = yield from self._meta_lookup(addr)
+                if meta is None:
+                    raise KRCoreError(f"no meta for {addr}")
+                self.dccache.put(addr, meta)
+            vq.dct_meta, vq.remote_qpn = meta, meta.dct_num
+        cache[addr] = vq
+        return vq
+
+    def _internal_read(self, addr: str, rkey: int, remote_off: int,
+                       nbytes: int, local_mr: MemoryRegion,
+                       local_off: int) -> Generator:
+        """Trusted kernel read via the shared-QP discipline (qpush/qpop)."""
+        vq = yield from self._internal_vq(addr)
+        wr = WorkRequest(op="READ", signaled=True, wr_id=0,
+                         local_mr=local_mr, local_off=local_off,
+                         remote_rkey=rkey, remote_off=remote_off,
+                         nbytes=nbytes, trusted=True)
+        rc = yield from self.sys_qpush(vq.id, [wr])
+        if rc != 0:
+            raise KRCoreError(f"internal read failed rc={rc}")
+        ent = yield from self.qpop_block(vq.id)
+        if ent.err:
+            raise KRCoreError("internal read errored")
+        return 0
+
+    # ===================================================== data path: Alg. 2
+    def sys_qpush(self, qd: int, wr_list: List[WorkRequest]) -> Generator:
+        """Algorithm 2, qpush. Returns 0 or raises KRCoreError pre-post."""
+        vq = self._vq(qd)
+        qp = self._require_qp(vq)
+        cm = self.cm
+        yield self.env.timeout(cm.syscall_us)
+        # segment the batch (paper §4.4: "achieved by segmenting"). The
+        # limit must leave BOTH reservation loops satisfiable: the SQ needs
+        # len <= sq_depth and the CQ reservation needs len <= cq_depth - 1
+        # (a batch of exactly cq_depth could never reserve its CQEs).
+        limit = min(qp.sq_depth, qp.cq_depth - 1)
+        if len(wr_list) > limit:
+            mid = len(wr_list) // 2
+            yield from self.sys_qpush(qd, wr_list[:mid])
+            yield from self.sys_qpush(qd, wr_list[mid:])
+            return 0
+
+        # ---- validity pre-checks (Alg.2 line 7; done before any mutation
+        # so a malformed batch leaves no queueing elements behind) --------
+        for req in wr_list:
+            yield self.env.timeout(cm.precheck_us)
+            try:
+                self._check_request(vq, req)
+            except KRCoreError:
+                return -1                                   # Alg.2 line 8
+            if req.op in ("READ", "WRITE"):
+                ok = yield from self._check_remote_mr(vq, req)
+                if not ok:
+                    return -1                               # Alg.2 line 8
+
+        # ---- clear space (Alg.2 lines 2-4) -------------------------------
+        while qp.sq_depth - qp.sq_occupancy < len(wr_list):
+            progressed = self._qpop_inner(vq)
+            if not progressed:
+                yield self.env.timeout(0.2)
+        # keep the CQ from overrunning too: voluntary poll when near-full
+        while len(qp.cq) > qp.cq_depth - len(wr_list) - 1:
+            if not self._qpop_inner(vq):
+                yield self.env.timeout(0.2)
+
+        # ---- selective signaling + wr_id encoding (lines 5-22) ----------
+        unsignaled_cnt = 0
+        for req in wr_list:
+            self._fill_routing(vq, req)
+            if req.signaled:
+                vq.comp_queue.append(CompEntry(NOT_READY, req.wr_id))
+                req.wr_id = encode_wr_id(vq.id, unsignaled_cnt + 1)
+                unsignaled_cnt = 0
+            else:
+                unsignaled_cnt += 1
+        last = wr_list[-1]
+        if not last.signaled:
+            # in the worst case only the last request is force-signaled
+            last.signaled = True
+            last.wr_id = encode_wr_id(0, unsignaled_cnt)   # NULL vq
+        # zero-copy path for large two-sided payloads (§4.5)
+        for req in wr_list:
+            if req.op == "SEND" and req.nbytes > cm.kernel_msg_buf_bytes:
+                self._to_zero_copy(vq, req)
+        qp.post_send(wr_list)                               # line 23
+        return 0
+
+    def sys_qpop(self, qd: int) -> Generator:
+        """Algorithm 2, qpop: non-blocking; returns CompEntry or None."""
+        vq = self._vq(qd)
+        yield self.env.timeout(self.cm.syscall_us)
+        self._qpop_inner(vq)
+        return vq.pop_ready()
+
+    def qpop_block(self, qd: int, poll_us: float = 0.2) -> Generator:
+        """Convenience: spin qpop until a completion arrives."""
+        while True:
+            ent = yield from self.sys_qpop(qd)
+            if ent is not None:
+                return ent
+            yield self.env.timeout(poll_us)
+
+    def sys_qpush_recv(self, qd: int, mr: MemoryRegion, offset: int,
+                       length: int, wr_id: int) -> Generator:
+        vq = self._vq(qd)
+        yield self.env.timeout(self.cm.syscall_us)
+        vq.recv_queue.append(RecvEntry(mr, offset, length, wr_id))
+        # drain kernel-staged small messages / pending zero-copy descriptors
+        yield from self._drain_staged(vq)
+        return 0
+
+    def sys_qpop_msgs(self, qd: int) -> Generator:
+        """qpop_msgs: poll received messages; returns list of PolledMsg.
+
+        Each message carries ``reply_qd`` — a VirtQueue already connected
+        back to the sender (accept semantics, §4.1), built from the DCT
+        metadata piggybacked in the message header (§4.4) so no meta-server
+        query is needed.
+        """
+        vq = self._vq(qd)
+        yield self.env.timeout(self.cm.syscall_us)
+        out: List[PolledMsg] = []
+        while vq.msg_queue:
+            out.append(vq.msg_queue.popleft())
+        return out
+
+    # ------------------------------------------------------------ internals
+    def _vq(self, qd: int) -> VirtQueue:
+        if qd not in self.vqs:
+            raise KRCoreError(f"bad queue descriptor {qd}")
+        return self.vqs[qd]
+
+    def _require_qp(self, vq: VirtQueue) -> QP:
+        if vq.qp is None:
+            raise KRCoreError("VirtQueue not connected")
+        return vq.qp
+
+    def _check_request(self, vq: VirtQueue, req: WorkRequest) -> None:
+        """Malformed-request detection (§4.4 factor 1)."""
+        if req.op not in ("READ", "WRITE", "SEND"):
+            raise KRCoreError(f"invalid opcode {req.op!r}")
+        if req.op in ("READ", "WRITE"):
+            if req.local_mr is None:
+                raise KRCoreError("missing local MR")
+            try:
+                req.local_mr.check(req.local_off, req.nbytes)
+            except MRError as e:
+                raise KRCoreError(f"local MR violation: {e}") from e
+        elif req.op == "SEND":
+            if req.local_mr is None and req.payload is None:
+                raise KRCoreError("SEND without payload or local MR")
+            if req.local_mr is not None:
+                try:
+                    req.local_mr.check(req.local_off, req.nbytes)
+                except MRError as e:
+                    raise KRCoreError(f"local MR violation: {e}") from e
+
+    def _check_remote_mr(self, vq: VirtQueue, req: WorkRequest) -> Generator:
+        """ValidMR / MRStore check (§4.2; Fig 12a '+4.54us' on miss).
+
+        On an MRStore miss the remote node's ValidMR table is probed with
+        one-sided READs (CPU-bypass) through the normal shared-QP path. The
+        remote table's own rkey is kernel-trusted state (exchanged at module
+        bring-up in a real deployment; read directly here).
+        """
+        if req.trusted:
+            return True
+        cached = self.mrstore.get(vq.remote, req.remote_rkey)
+        if cached is None:
+            remote_node = self.fabric.node(vq.remote)
+            remote_mod: KRCoreModule = remote_node.krcore  # type: ignore
+            kv = remote_mod.validmr.kv
+            key = ValidMRStore._key(req.remote_rkey)
+            h = fnv1a(key)
+            val = None
+            for probe in range(8):
+                idx = (h + probe) % kv.n_slots
+                yield from self._internal_read(
+                    vq.remote, kv.mr.rkey, idx * SLOT, SLOT,
+                    self._scratch_mr, 64)
+                raw = self.node.read_bytes(self._scratch_mr.addr, 64, SLOT)
+                k, v = DrTMKV.parse_slot(raw)
+                if k == h:
+                    val = v
+                    break
+                if k == 0:
+                    break
+            if val is None:
+                return False
+            addr, length, valid = ValidMRStore.parse(val)
+            if not valid:
+                return False
+            self.mrstore.put(vq.remote, req.remote_rkey, addr, length)
+            cached = (addr, length)
+        addr, length = cached
+        if req.remote_off < 0 or req.remote_off + req.nbytes > length:
+            return False
+        return True
+
+    def _fill_routing(self, vq: VirtQueue, req: WorkRequest) -> None:
+        req.dst = vq.remote
+        req.dst_qpn = vq.remote_qpn
+        if req.op == "SEND":
+            hdr = dict(req.header or {})
+            hdr.update({
+                "src": self.node.name,
+                "src_vq": vq.id,
+                "dst_vq": vq.remote_vq,
+                "dst_port": getattr(vq, "remote_port", None),
+                # piggybacked DCT metadata of *this* node (§4.4)
+                "dct": (self.node.id, self.dc_target.qpn, self.dct_key),
+                "kind": hdr.get("kind", "DATA"),
+            })
+            req.header = hdr
+            if req.payload is None and req.local_mr is not None:
+                req.payload = self.node.read_bytes(
+                    req.local_mr.addr, req.local_off, req.nbytes)
+
+    def _to_zero_copy(self, vq: VirtQueue, req: WorkRequest) -> None:
+        """Rewrite a large SEND into a small descriptor send (§4.5)."""
+        req.header = dict(req.header or {})
+        req.header["kind"] = "ZC_DESC"
+        req.header["zc"] = (req.local_mr.rkey, req.local_off, req.nbytes)
+        req.header["zc_len"] = req.nbytes
+        req.payload = np.zeros(32, dtype=np.uint8)   # descriptor only
+        # ensure our MR is remotely checkable
+        # (already in ValidMR via qreg_mr)
+
+    def _qpop_inner(self, vq: VirtQueue) -> bool:
+        """Algorithm 2, QPopInner: poll the physical CQ(s), dispatch."""
+        progressed = False
+        qps = [vq.qp] + ([vq.old_qp] if vq.old_qp is not None else [])
+        for qp in qps:
+            if qp is None:
+                continue
+            for cqe in qp.poll_cq(max_n=16):
+                progressed = True
+                vq_id, comp_cnt = decode_wr_id(cqe.wr_id)
+                # hardware covers == encoded comp_cnt (see qp.py) — the
+                # assert is a free cross-check of the Alg.2 accounting.
+                assert cqe.covers == max(comp_cnt, 1) or cqe.status != "OK", \
+                    (cqe.covers, comp_cnt)
+                if vq_id:
+                    target = self.vqs.get(vq_id)
+                    if target is not None:
+                        ok = target.mark_ready()
+                        if cqe.status != "OK":
+                            target.errored = True
+                if cqe.status != "OK" and qp.state == QPState.ERR:
+                    self.env.process(self._recover(qp),
+                                     f"{self.node.name}.recover")
+        return progressed
+
+    def _recover(self, qp: QP) -> Generator:
+        """Reconfigure an errored physical QP in the background (§3.1 C#3:
+        the stall KRCORE's pre-checks are designed to make impossible on
+        well-formed workloads)."""
+        yield from qp.reset_from_error()
+
+    def _drain_staged(self, vq: VirtQueue) -> Generator:
+        staged = self._staged.get(vq.id)
+        while staged and vq.recv_queue:
+            header, payload = staged.popleft()
+            yield from self._deliver_small(vq, header, payload)
+        staged_zc = self._staged_zc.get(vq.id)
+        while staged_zc and vq.recv_queue:
+            header = staged_zc.popleft()
+            yield from self._zc_pull(vq, header)
+
+    # =============================================== receive pump & dispatch
+    def _recv_pump(self, qp: QP) -> Generator:
+        while True:
+            yield qp.recv_notify.get()
+            for cqe in qp.poll_recv_cq(max_n=16):
+                self._post_kernel_recv(qp)       # replenish the slab slot
+                header = cqe.header or {}
+                kind = header.get("kind", "DATA")
+                payload = self.node.read_bytes(
+                    self._kernel_slab_mr.addr, cqe.wr_id,
+                    min(cqe.byte_len, self.cm.kernel_msg_buf_bytes))
+                if kind == "DATA":
+                    yield from self._on_data(header, payload[:cqe.byte_len])
+                elif kind == "ZC_DESC":
+                    yield from self._on_zc_desc(header)
+                elif kind == "XFER_NOTIFY":
+                    yield from self._on_xfer_notify(header)
+                elif kind == "XFER_ACK":
+                    self._on_xfer_ack(header)
+                elif kind == "FLUSH":
+                    pass                          # transfer-protocol no-op
+                self._slab_slots.append(cqe.wr_id)
+
+    def _route_incoming(self, header: dict) -> Optional[VirtQueue]:
+        vq_id = header.get("dst_vq")
+        if vq_id:
+            return self.vqs.get(vq_id)
+        port = header.get("dst_port")
+        if port is not None:
+            return self.ports.get(port)
+        return None
+
+    def _learn_sender(self, header: dict) -> None:
+        """Cache the piggybacked DCT metadata of the sender (§4.4)."""
+        dct = header.get("dct")
+        src = header.get("src")
+        if dct and src:
+            self.dccache.put(src, DCTMeta(*dct))
+
+    def _on_data(self, header: dict, payload: np.ndarray) -> Generator:
+        self._learn_sender(header)
+        vq = self._route_incoming(header)
+        if vq is None:
+            return                                 # no listener: drop
+        if vq.recv_queue:
+            yield from self._deliver_small(vq, header, payload)
+        else:
+            self._staged.setdefault(vq.id, deque()).append((header, payload))
+
+    def _deliver_small(self, vq: VirtQueue, header: dict,
+                       payload: np.ndarray) -> Generator:
+        """memcpy kernel buffer -> user buffer (the §4.5 baseline path)."""
+        ent = vq.recv_queue.popleft()
+        n = min(len(payload), ent.length)
+        yield self.env.timeout(self.cm.memcpy_us(n))
+        self.node.write_bytes(ent.mr.addr, ent.offset, payload[:n])
+        vq.msg_queue.append(PolledMsg(
+            reply_qd=self._make_reply_qd(header, vq),
+            wr_id=ent.wr_id, byte_len=n,
+            src=header.get("src", "?"), src_vq=header.get("src_vq", 0)))
+
+    def _on_zc_desc(self, header: dict) -> Generator:
+        self._learn_sender(header)
+        vq = self._route_incoming(header)
+        if vq is None:
+            return
+        if vq.recv_queue:
+            yield from self._zc_pull(vq, header)
+        else:
+            self._staged_zc.setdefault(vq.id, deque()).append(header)
+
+    def _zc_pull(self, vq: VirtQueue, header: dict) -> Generator:
+        """Zero-copy: one-sided READ straight into the user buffer (§4.5)."""
+        rkey, off, nbytes = header["zc"]
+        src = header["src"]
+        ent = vq.recv_queue.popleft()
+        n = min(nbytes, ent.length)
+        pool = self.pools[vq.owner_cpu % len(self.pools)]
+        kind, qp = pool.select(src)
+        wr = WorkRequest(op="READ", wr_id=encode_wr_id(0, 1), signaled=True,
+                         local_mr=ent.mr, local_off=ent.offset,
+                         remote_rkey=rkey, remote_off=off, nbytes=n,
+                         dst=src, dst_qpn=None)
+        qp.post_send([wr])
+        while not qp.poll_cq():
+            yield self.env.timeout(0.1)
+        self.stat_zc_reads += 1
+        vq.msg_queue.append(PolledMsg(
+            reply_qd=self._make_reply_qd(header, vq),
+            wr_id=ent.wr_id, byte_len=n,
+            src=src, src_vq=header.get("src_vq", 0)))
+
+    def _make_reply_qd(self, header: dict, listener: VirtQueue) -> int:
+        """accept semantics: a VirtQueue connected back to the sender, built
+        from piggybacked metadata — zero network ops (§4.4)."""
+        src = header.get("src")
+        src_vq = header.get("src_vq", 0)
+        vq = VirtQueue(owner_cpu=listener.owner_cpu)
+        self.vqs[vq.id] = vq
+        pool = self.pools[vq.owner_cpu % len(self.pools)]
+        kind, qp = pool.select(src)
+        vq.qp, vq.kind, vq.remote = qp, kind, src
+        vq.remote_vq = src_vq
+        if kind == "RC":
+            vq.remote_qpn = qp.peer[1]
+        else:
+            meta = self.dccache.get(src)
+            vq.dct_meta = meta
+            vq.remote_qpn = meta.dct_num if meta else None
+        return vq.id
+
+    # ======================================================== transfer (§4.6)
+    def _maybe_promote(self, pool: HybridQPPool, addr: str) -> None:
+        """Background RCQP creation for hot peers — *never* blocks callers."""
+        if (pool.use_counts.get(addr, 0) >= self.promote_threshold
+                and not pool.has_rc(addr)
+                and (pool.cpu, addr) not in self._promotions_inflight
+                and addr != self.node.name):
+            self._promotions_inflight.add((pool.cpu, addr))
+            self.env.process(self._promote(pool, addr),
+                             f"{self.node.name}.promote.{addr}")
+
+    def _promote(self, pool: HybridQPPool, addr: str) -> Generator:
+        """Create an RCQP pair to ``addr`` in the background, insert it into
+        the pool, then transparently transfer DC-bound VirtQueues (§4.3)."""
+        remote = self.fabric.node(addr)
+        qa, qb = yield from connect_rc_pair(self.fabric, self.node, remote)
+        remote_mod: KRCoreModule = remote.krcore            # type: ignore
+        remote_mod._adopt_server_rc(self.node.name, qb)
+        evicted = pool.insert_rc(addr, qa)
+        self.stat_promotions += 1
+        self._promotions_inflight.discard((pool.cpu, addr))
+        # upgrade existing DC virtqueues talking to addr
+        for vq in list(self.vqs.values()):
+            if vq.remote == addr and vq.kind == "DC" and vq.qp is not None:
+                yield from self.transfer(vq, "RC", qa)
+        if evicted is not None:
+            ev_addr, ev_qp = evicted
+            # demote virtqueues still on the evicted RCQP back to DC
+            for vq in list(self.vqs.values()):
+                if vq.qp is ev_qp:
+                    dc = pool.dc_qps[0]
+                    meta = self.dccache.get(ev_addr)
+                    if meta is None:
+                        meta = yield from self._meta_lookup(ev_addr)
+                        if meta is not None:
+                            self.dccache.put(ev_addr, meta)
+                    vq.dct_meta = meta
+                    yield from self.transfer(vq, "DC", dc)
+
+    def _adopt_server_rc(self, peer: str, qp: QP) -> None:
+        """Install the passive end of a background RC pair."""
+        self._watch_server_qp(qp)
+        self.pools[0].insert_rc(peer, qp)
+
+    def transfer(self, vq: VirtQueue, new_kind: str, new_qp: QP) -> Generator:
+        """Physical QP transfer preserving FIFO (§4.6).
+
+        1. Post a *fake* signaled request on the source QP and wait for its
+           completion — all previously posted requests are then complete.
+        2. Notify the remote kernel (control message) so its reply path
+           follows; do not wait for the ack — lazy switch: keep polling the
+           old QP until the ack arrives.
+        """
+        old_qp = vq.qp
+        if old_qp is new_qp:
+            return
+        self.stat_transfers += 1
+        # (1) FIFO flush via a fake request
+        fake = WorkRequest(op="SEND", wr_id=encode_wr_id(0, 1), signaled=True,
+                           payload=np.zeros(1, dtype=np.uint8),
+                           header={"kind": "FLUSH"},
+                           dst=vq.remote, dst_qpn=vq.remote_qpn)
+        old_qp.post_send([fake])
+        while not old_qp.poll_cq():
+            yield self.env.timeout(0.1)
+        # (2) notify remote, switch immediately, poll old lazily until ack
+        vq.old_qp = old_qp
+        vq.in_transfer = True
+        vq.qp = new_qp
+        vq.kind = new_kind
+        if new_kind == "RC":
+            vq.remote_qpn = new_qp.peer[1]
+        else:
+            vq.remote_qpn = vq.dct_meta.dct_num if vq.dct_meta else None
+        notify = WorkRequest(
+            op="SEND", wr_id=encode_wr_id(0, 1), signaled=True,
+            payload=np.zeros(1, dtype=np.uint8),
+            header={"kind": "XFER_NOTIFY", "src": self.node.name,
+                    "xfer_vq": vq.remote_vq, "src_vq": vq.id,
+                    "dct": (self.node.id, self.dc_target.qpn, self.dct_key)},
+            dst=vq.remote, dst_qpn=vq.remote_qpn)
+        new_qp.post_send([notify])
+        while not new_qp.poll_cq():
+            yield self.env.timeout(0.1)
+
+    def _on_xfer_notify(self, header: dict) -> Generator:
+        """Remote switched QPs for a vq pair: re-bind our reply vq and ack."""
+        self._learn_sender(header)
+        vq_id = header.get("xfer_vq")
+        src = header.get("src")
+        if vq_id and vq_id in self.vqs:
+            vq = self.vqs[vq_id]
+            pool = self.pools[vq.owner_cpu % len(self.pools)]
+            kind, qp = pool.select(src)
+            vq.qp, vq.kind = qp, kind
+            if kind == "RC":
+                vq.remote_qpn = qp.peer[1]
+            else:
+                meta = self.dccache.get(src)
+                vq.remote_qpn = meta.dct_num if meta else vq.remote_qpn
+        # ack so the sender can stop lazy-polling its old QP
+        if src is not None:
+            ack = WorkRequest(
+                op="SEND", wr_id=encode_wr_id(0, 1), signaled=True,
+                payload=np.zeros(1, dtype=np.uint8),
+                header={"kind": "XFER_ACK", "ack_vq": header.get("src_vq")},
+                dst=src, dst_qpn=None)
+            pool = self.pools[0]
+            kind, qp = pool.select(src)
+            if kind == "DC":
+                meta = self.dccache.get(src)
+                ack.dst_qpn = meta.dct_num if meta else None
+            else:
+                ack.dst_qpn = qp.peer[1]
+            qp.post_send([ack])
+            while not qp.poll_cq():
+                yield self.env.timeout(0.1)
+
+    def _on_xfer_ack(self, header: dict) -> None:
+        vq_id = header.get("ack_vq")
+        if vq_id and vq_id in self.vqs:
+            vq = self.vqs[vq_id]
+            vq.old_qp = None
+            vq.in_transfer = False
+
+    # ========================================================== accounting
+    def memory_bytes(self) -> int:
+        """Kernel memory attributable to connection state (Fig 13a)."""
+        total = sum(p.memory_bytes() for p in self.pools)
+        total += self.dccache.memory_bytes()
+        return total
+
+
+def install(node: Node, meta_servers: List[MetaServer], **kw) -> KRCoreModule:
+    """Create a module on ``node`` and expose it as ``node.krcore``."""
+    mod = KRCoreModule(node, meta_servers, **kw)
+    node.krcore = mod                                        # type: ignore
+    return mod

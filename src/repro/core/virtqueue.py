@@ -1,0 +1,111 @@
+"""VirtQueue: the virtualized queue abstraction (paper §4.1–§4.4).
+
+A VirtQueue gives each application the *semantics* of an exclusively-owned
+RCQP (FIFO, reliable, one- and two-sided verbs) while physically sharing a
+QP from the node's hybrid pool. The three hazards of sharing a low-level
+API (§4.4) are handled exactly as in the paper:
+
+1. malformed request detection (opcode + ValidMR/MRStore checks),
+2. NIC queue-overflow prevention (software ``uncomp_cnt`` accounting with
+   selective signaling and voluntary polling),
+3. completion dispatch via wr_id encoding.
+
+wr_id encoding: ``(vq_id << 20) | comp_cnt`` with vq_id 0 == NULL.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from .qp import QP, WorkRequest
+
+NOT_READY = 0
+READY = 1
+
+_CNT_BITS = 20
+_CNT_MASK = (1 << _CNT_BITS) - 1
+
+
+def encode_wr_id(vq_id: int, comp_cnt: int) -> int:
+    if comp_cnt > _CNT_MASK:
+        raise ValueError("comp_cnt too large")
+    return (vq_id << _CNT_BITS) | comp_cnt
+
+
+def decode_wr_id(wr_id: int) -> Tuple[int, int]:
+    return wr_id >> _CNT_BITS, wr_id & _CNT_MASK
+
+
+@dataclasses.dataclass
+class CompEntry:
+    """Software completion-queue entry: [status, user_wr_id] (Alg. 2 l.11)."""
+    status: int
+    user_wr_id: int
+    err: bool = False
+
+
+@dataclasses.dataclass
+class RecvEntry:
+    """User receive buffer registered via qpush_recv."""
+    mr: "object"
+    offset: int
+    length: int
+    wr_id: int
+
+
+@dataclasses.dataclass
+class PolledMsg:
+    """What qpop_msgs returns per message (paper adds `accept` semantics)."""
+    reply_qd: int
+    wr_id: int
+    byte_len: int
+    src: str
+    src_vq: int
+
+
+class VirtQueue:
+    """Kernel virtual queue (Algorithm 1, VirtQueueCreate)."""
+
+    _ids = itertools.count(1)          # 0 reserved for NULL
+
+    def __init__(self, owner_cpu: int = 0):
+        self.id = next(VirtQueue._ids)
+        self.owner_cpu = owner_cpu
+        # software queues (Alg. 1 lines 3-4)
+        self.comp_queue: Deque[CompEntry] = deque()
+        self.recv_queue: Deque[RecvEntry] = deque()
+        self.msg_queue: Deque[PolledMsg] = deque()
+        # physical binding (Alg. 1 line 5; updated by VirtQueueConnect)
+        self.qp: Optional[QP] = None
+        self.kind: Optional[str] = None          # "RC" | "DC"
+        self.remote: Optional[str] = None        # target node name
+        self.remote_qpn: Optional[int] = None    # DC target / server qpn
+        self.dct_meta = None                     # DCTMeta when kind == "DC"
+        self.remote_vq: Optional[int] = None     # peer VirtQueue id (2-sided)
+        self.remote_port: Optional[int] = None   # server port (first contact)
+        self.bound_port: Optional[int] = None
+        # transfer protocol state (§4.6): old QP polled lazily post-switch
+        self.old_qp: Optional[QP] = None
+        self.in_transfer = False
+        self.errored = False
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def connected(self) -> bool:
+        return self.qp is not None
+
+    def mark_ready(self) -> bool:
+        """Mark the first NotReady completion entry Ready (Alg. 2 l.30)."""
+        for ent in self.comp_queue:
+            if ent.status == NOT_READY:
+                ent.status = READY
+                return True
+        return False
+
+    def pop_ready(self) -> Optional[CompEntry]:
+        if self.comp_queue and self.comp_queue[0].status == READY:
+            return self.comp_queue.popleft()
+        return None

@@ -1,0 +1,5 @@
+from .pipeline import (SyntheticLM, pack_documents, shard_batch,
+                       make_batch_iterator)
+
+__all__ = ["SyntheticLM", "pack_documents", "shard_batch",
+           "make_batch_iterator"]

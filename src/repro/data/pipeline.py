@@ -1,0 +1,134 @@
+"""Data pipeline: deterministic synthetic LM streams, document packing,
+and per-host sharded device feed.
+
+The synthetic stream is an order-2 Markov-ish process (next token is an
+affine function of the previous two plus bounded noise), so a real model
+can *learn* it — integration tests assert the training loss decreases,
+which pure-uniform tokens would not allow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import queue as queue_mod
+from typing import Any, Dict, Iterator, List, Optional
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class SyntheticLM:
+    """Deterministic, seekable synthetic token stream."""
+
+    def __init__(self, vocab: int, seq_len: int, batch: int,
+                 seed: int = 0, noise: float = 0.05):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = batch
+        self.seed = seed
+        self.noise = noise
+        self._step = 0
+
+    def seek(self, step: int) -> None:
+        """Restart from an arbitrary step (checkpoint-resume determinism)."""
+        self._step = step
+
+    def _gen(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.RandomState((self.seed * 1_000_003 + step)
+                                    % (2 ** 31))
+        b, s, v = self.batch, self.seq_len, self.vocab
+        toks = np.zeros((b, s), np.int64)
+        toks[:, 0] = rng.randint(0, v, b)
+        toks[:, 1] = rng.randint(0, v, b)
+        a, c = 31, 17
+        for t in range(2, s):
+            toks[:, t] = (a * toks[:, t - 1] + 7 * toks[:, t - 2] + c) % v
+        flip = rng.rand(b, s) < self.noise
+        toks = np.where(flip, rng.randint(0, v, (b, s)), toks)
+        return {"tokens": toks.astype(np.int32),
+                "labels": toks.astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        batch = self._gen(self._step)
+        self._step += 1
+        return batch
+
+
+def pack_documents(docs: List[np.ndarray], seq_len: int, pad_id: int = 0
+                   ) -> Dict[str, np.ndarray]:
+    """Greedy sequence packing: concatenate docs into fixed-length rows;
+    label -1 at every document boundary (no cross-doc prediction)."""
+    rows: List[np.ndarray] = []
+    labels: List[np.ndarray] = []
+    cur: List[int] = []
+    cur_lab: List[int] = []
+    for doc in docs:
+        doc = list(doc)
+        i = 0
+        while i < len(doc):
+            space = seq_len - len(cur)
+            take = doc[i:i + space]
+            cur.extend(take)
+            # first token of a doc gets label -1 on its *predecessor* slot
+            cur_lab.extend(take)
+            if i == 0 and len(cur_lab) >= len(take):
+                idx = len(cur_lab) - len(take)
+                cur_lab[idx] = -1
+            i += len(take)
+            if len(cur) == seq_len:
+                rows.append(np.array(cur, np.int32))
+                labels.append(np.array(cur_lab, np.int32))
+                cur, cur_lab = [], []
+    if cur:
+        pad = seq_len - len(cur)
+        rows.append(np.array(cur + [pad_id] * pad, np.int32))
+        labels.append(np.array(cur_lab + [-1] * pad, np.int32))
+    return {"tokens": np.stack(rows), "labels": np.stack(labels)}
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh, specs=None):
+    """device_put a host batch with the given (or default DP) shardings."""
+    if specs is None:
+        dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+        dp = dp if len(dp) > 1 else dp[0]
+        specs = {k: P(dp, *([None] * (v.ndim - 1)))
+                 for k, v in batch.items()}
+    return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+            for k, v in batch.items()}
+
+
+def make_batch_iterator(source: Iterator, mesh=None, specs=None,
+                        prefetch: int = 2) -> Iterator:
+    """Background-thread prefetch + device placement (overlaps host data
+    work with device compute — one of the standard distributed-training
+    overlap tricks)."""
+    if prefetch <= 0:
+        for b in source:
+            yield shard_batch(b, mesh, specs) if mesh is not None else b
+        return
+
+    q: "queue_mod.Queue" = queue_mod.Queue(maxsize=prefetch)
+    stop = object()
+
+    def worker():
+        try:
+            for b in source:
+                if mesh is not None:
+                    b = shard_batch(b, mesh, specs)
+                q.put(b)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item

@@ -1,0 +1,5 @@
+from .shardings import (batch_specs, cache_specs, kv_shard_mode,
+                        opt_state_specs, param_specs)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "kv_shard_mode",
+           "opt_state_specs"]

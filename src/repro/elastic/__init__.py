@@ -1,0 +1,5 @@
+from .runtime import (ElasticTrainer, ExecutablePool, StragglerPolicy,
+                      speculative_map)
+
+__all__ = ["ExecutablePool", "ElasticTrainer", "StragglerPolicy",
+           "speculative_map"]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: dense GQA attention with window + softcap."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, cap=None,
+                        kv_len=None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    keep = jnp.ones((sq, skv), bool)
+    if causal:
+        keep &= kpos <= qpos
+    if window is not None:
+        keep &= kpos > qpos - window
+    if kv_len is not None:
+        keep &= kpos < kv_len
+    s = jnp.where(keep[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return o.reshape(b, hq, sq, d)

@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the RACE-lookup kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .race_lookup import race_lookup_pallas
+from .ref import race_lookup_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def race_lookup(fp_table, val_table, queries, bucket_idx,
+                impl: str = "pallas", interpret: bool = True):
+    """Batched two-choice hash lookup.
+
+    fp_table (NB, NSLOT) i32, val_table (NB, NSLOT, VDIM), queries (NQ,)
+    i32 fingerprints, bucket_idx (NQ, 2) i32 -> (values (NQ, VDIM),
+    found (NQ,) i32). ``interpret=True`` runs the Pallas kernel body on
+    CPU; on a real TPU pass interpret=False.
+    """
+    if impl == "ref":
+        return race_lookup_ref(fp_table, val_table, queries, bucket_idx)
+    return race_lookup_pallas(fp_table, val_table, queries, bucket_idx,
+                              interpret=interpret)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: batched RACE-hash lookup ("one-sided READ" analogue).
+
+The meta server / DrTM-KV of the paper serves lookups with one one-sided
+RDMA READ, bypassing the remote CPU. On TPU the table lives in device HBM
+and the lookup is a gather: for each query, fetch its TWO candidate buckets
+(RACE extendible hashing), compare fingerprints against all slots, and
+select the matching value row — one fused kernel, no host round-trip.
+
+Memory plan per grid step (one query):
+  * scalar-prefetch: bucket indices (nq, 2) — drives the BlockSpec index
+    maps, so the bucket rows are DMA'd HBM->VMEM ahead of compute.
+  * VMEM blocks: 2 fingerprint rows (1, NSLOT) + 2 value blocks
+    (1, NSLOT, VDIM) + query fingerprint (1, 1).
+  * compute: slot-compare (VPU) + mask-select contraction (MXU when
+    VDIM >= 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lookup_kernel(bidx_ref, query_ref, fps1_ref, fps2_ref,
+                   vals1_ref, vals2_ref, out_ref, found_ref):
+    """One query per grid step: compare both buckets, select the value."""
+    q = query_ref[0]                                   # scalar fingerprint
+    fps = jnp.concatenate([fps1_ref[0], fps2_ref[0]])  # (2*NSLOT,)
+    vals = jnp.concatenate([vals1_ref[0], vals2_ref[0]],
+                           axis=0)                     # (2*NSLOT, VDIM)
+    hit = (fps == q) & (fps != 0)
+    # select the first matching slot (one-hot contraction -> MXU-friendly)
+    first = jnp.argmax(hit)
+    onehot = (jax.lax.iota(jnp.int32, hit.shape[0]) == first) & hit
+    sel = onehot.astype(vals.dtype)
+    out_ref[0, :] = jnp.einsum("s,sv->v", sel, vals)
+    found_ref[0] = jnp.any(hit).astype(jnp.int32)
+
+
+def race_lookup_pallas(fp_table, val_table, queries, bucket_idx,
+                       *, interpret: bool = True):
+    """fp_table: (NB, NSLOT) int32; val_table: (NB, NSLOT, VDIM);
+    queries: (NQ,) int32 fingerprints; bucket_idx: (NQ, 2) int32.
+
+    Returns (values (NQ, VDIM), found (NQ,) int32).
+    """
+    nb, nslot = fp_table.shape
+    vdim = val_table.shape[-1]
+    nq = queries.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, bidx: (i, 0)),          # query
+            pl.BlockSpec((1, nslot), lambda i, bidx: (bidx[i, 0], 0)),
+            pl.BlockSpec((1, nslot), lambda i, bidx: (bidx[i, 1], 0)),
+            pl.BlockSpec((1, nslot, vdim),
+                         lambda i, bidx: (bidx[i, 0], 0, 0)),
+            pl.BlockSpec((1, nslot, vdim),
+                         lambda i, bidx: (bidx[i, 1], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, vdim), lambda i, bidx: (i, 0)),
+            pl.BlockSpec((1,), lambda i, bidx: (i,)),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((nq, vdim), val_table.dtype),
+        jax.ShapeDtypeStruct((nq,), jnp.int32),
+    ]
+    values, found = pl.pallas_call(
+        _lookup_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(bucket_idx, queries.reshape(nq, 1), fp_table, fp_table,
+      val_table, val_table)
+    return values, found

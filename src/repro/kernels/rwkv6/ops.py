@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the WKV kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import wkv_ref
+from .rwkv6 import wkv_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def wkv(r, k, v, logw, u, *, chunk: int = 16, impl: str = "pallas",
+        interpret: bool = True):
+    """RWKV-6 WKV scan: r,k,logw (B,H,S,dk); v (B,H,S,dv); u (H,dk)."""
+    if impl == "ref":
+        return wkv_ref(r, k, v, logw, u)
+    return wkv_pallas(r, k, v, logw, u, chunk=chunk, interpret=interpret)

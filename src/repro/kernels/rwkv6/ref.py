@@ -1,0 +1,40 @@
+"""Oracles for the WKV kernel: the chunked jnp form AND a plain sequential
+recurrence (the ground truth both chunked forms must match)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv_chunked
+
+
+def wkv_ref(r, k, v, logw, u):
+    """Chunked jnp reference with zero initial state."""
+    b, h, s, dk = r.shape
+    dv = v.shape[-1]
+    state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    o, _ = wkv_chunked(r, k, v, logw, u, state)
+    return o
+
+
+def wkv_sequential(r, k, v, logw, u):
+    """Token-by-token recurrence (slow, exact)."""
+    b, h, s, dk = r.shape
+    dv = v.shape[-1]
+
+    def step(state, inp):
+        rt, kt, vt, lwt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", rt,
+                       state + u[None, :, :, None] * kv)
+        state = state * jnp.exp(lwt)[..., None] + kv
+        return state, o
+
+    xs = (r.transpose(2, 0, 1, 3).astype(jnp.float32),
+          k.transpose(2, 0, 1, 3).astype(jnp.float32),
+          v.transpose(2, 0, 1, 3).astype(jnp.float32),
+          logw.transpose(2, 0, 1, 3).astype(jnp.float32))
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    _, o = jax.lax.scan(step, state0, xs)
+    return o.transpose(1, 2, 0, 3).astype(r.dtype)

@@ -1,0 +1,3 @@
+from .race import RaceKVStore, DeviceRaceTable
+
+__all__ = ["RaceKVStore", "DeviceRaceTable"]

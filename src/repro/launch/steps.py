@@ -1,0 +1,140 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs
+for every (architecture x shape) cell — the units the dry-run lowers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (init_decode_cache, init_params, prefill,
+                          train_loss)
+from repro.models.model import decode_step as _decode_step
+from repro.models.config import SHAPES_BY_NAME, ModelConfig, ShapeSpec
+from repro.optim import AdamWState, adamw_init, adamw_update, \
+    clip_by_global_norm
+
+ENC_LEN_FOR_DECODE = 4096        # encdec decode cells: stub memory length
+
+
+# ----------------------------------------------------------- step builders
+def make_train_step(cfg, lr: float = 3e-4):
+    """(params, opt_state, batch) -> (loss, params, opt_state).
+
+    cfg.grad_accum > 1 splits the global batch into microbatches scanned
+    sequentially with fp32 gradient accumulation — bounds per-microbatch
+    activation memory for the large models (llava, deepseek, rwkv6)."""
+    accum = max(cfg.grad_accum, 1)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: train_loss(cfg, p, batch))(params)
+
+    def step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda t: t.reshape(accum, t.shape[0] // accum,
+                                    *t.shape[1:]), batch)
+
+            def micro(carry, mb):
+                loss_sum, gsum = carry
+                l, g = grads_of(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (loss_sum + l, gsum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss_sum / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        return loss, params, opt_state
+
+    return step
+
+
+def make_prefill_step(cfg, max_len: int):
+    def step(params, batch):
+        return prefill(cfg, params, batch, max_len)
+    return step
+
+
+def make_decode_step(cfg):
+    def step(params, cache, tokens, cur_len):
+        return _decode_step(cfg, params, cache, tokens, cur_len)
+    return step
+
+
+# ------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg, shape: ShapeSpec, with_labels: bool) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        enc = dec = s // 2
+        out = {"frames": _sds((b, enc, cfg.d_model), jnp.float32),
+               "dec_tokens": _sds((b, dec), i32)}
+        if with_labels:
+            out["labels"] = _sds((b, dec), i32)
+        return out
+    if cfg.frontend == "vision":
+        text = s - cfg.n_frontend_tokens
+        out = {"tokens": _sds((b, text), i32),
+               "vision_embeds": _sds((b, cfg.n_frontend_tokens, 1024),
+                                     jnp.float32)}
+        if with_labels:
+            out["labels"] = _sds((b, text), i32)
+        return out
+    out = {"tokens": _sds((b, s), i32)}
+    if with_labels:
+        out["labels"] = _sds((b, s), i32)
+    return out
+
+
+def params_struct(cfg) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init_params(cfg, key))
+
+
+def opt_struct(cfg, p_struct) -> Any:
+    return jax.eval_shape(adamw_init, p_struct)
+
+
+def cache_struct(cfg, shape: ShapeSpec) -> Any:
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len,
+                                  enc_len=ENC_LEN_FOR_DECODE))
+
+
+def input_specs(cfg, shape_name: str) -> Dict[str, Any]:
+    """All ShapeDtypeStruct stand-ins for one cell (no allocation).
+
+    Returns {"kind", "args": tuple_of_structs} matching the cell's step fn:
+      train:   (params, opt_state, batch)
+      prefill: (params, batch)
+      decode:  (params, cache, tokens, cur_len)
+    """
+    shape = SHAPES_BY_NAME[shape_name]
+    p = params_struct(cfg)
+    if shape.kind == "train":
+        return {"kind": "train",
+                "args": (p, opt_struct(cfg, p),
+                         batch_struct(cfg, shape, with_labels=True))}
+    if shape.kind == "prefill":
+        return {"kind": "prefill",
+                "args": (p, batch_struct(cfg, shape, with_labels=False))}
+    # decode
+    tokens = _sds((shape.global_batch,), jnp.int32)
+    cur = _sds((), jnp.int32)
+    return {"kind": "decode",
+            "args": (p, cache_struct(cfg, shape), tokens, cur)}

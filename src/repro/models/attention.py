@@ -1,0 +1,229 @@
+"""Attention: GQA with RoPE, sliding window, logit softcap; three impls.
+
+Shapes: q (B, Hq, Sq, D); k/v (B, Hkv, Skv, D). GQA groups Hq into Hkv
+groups of ``G = Hq // Hkv``.
+
+Implementations (cfg.attn_impl):
+  * ``dense``      — materializes (Sq, Skv) scores. Oracle + small models.
+  * ``scan_kv``    — lax.scan over KV chunks with online softmax (flash
+                     style), bounded memory, full rectangular FLOPs.
+  * ``tri_unroll`` — python-unrolled q chunks, each scanning only the KV
+                     chunks its causal/window footprint needs: ~2x fewer
+                     FLOPs for causal attention at the cost of HLO size.
+                     (This is a §Perf hillclimb lever — see EXPERIMENTS.md.)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import softcap
+
+NEG_INF = -1e30
+
+
+def _mask(qpos: jnp.ndarray, kpos: jnp.ndarray, causal: bool,
+          window: Optional[int], kv_len: Optional[jnp.ndarray]
+          ) -> jnp.ndarray:
+    """Boolean keep-mask of shape (Sq, Skv) (or broadcastable)."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def _sdpa(q, k, v, qpos, kpos, *, causal, window, cap, kv_len=None):
+    """Dense scaled-dot-product attention on one (q-chunk, kv-chunk) pair.
+
+    q: (B, Hkv, G, Sq, D); k/v: (B, Hkv, Skv, D). fp32 softmax.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    keep = _mask(qpos, kpos, causal, window, kv_len)
+    s = jnp.where(keep[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    q0: int = 0, kv_len=None):
+    """q: (B,Hq,Sq,D), k/v: (B,Hkv,Skv,D) -> (B,Hq,Sq,D)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    qpos = q0 + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[2])
+    out = _sdpa(qg, k, v, qpos, kpos, causal=causal, window=window, cap=cap,
+                kv_len=kv_len)
+    return out.reshape(b, hq, sq, d)
+
+
+def _online_step(carry, qg, kc, vc, qpos, kpos, *, causal, window, cap,
+                 kv_len=None):
+    """One online-softmax accumulation step over a KV chunk.
+
+    carry: (acc (B,Hkv,G,Sq,D) f32, m (…,Sq) f32, l (…,Sq) f32)
+    """
+    acc, m, l = carry
+    scale = 1.0 / math.sqrt(qg.shape[-1])
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    keep = _mask(qpos, kpos, causal, window, kv_len)
+    s = jnp.where(keep[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    corr = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * corr + jnp.sum(p, axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+    return (acc, m_new, l)
+
+
+def _finalize(acc, l, dtype):
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
+
+
+def scan_kv_attention(q, k, v, *, causal=True, window=None, cap=None,
+                      q_chunk=1024, kv_chunk=1024, q0: int = 0):
+    """Flash-style: scan over q chunks (outer) and kv chunks (inner).
+
+    Every (q,kv) chunk pair is visited (rectangular FLOPs); masking zeroes
+    the invalid region. Memory is O(chunk^2) instead of O(S^2).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    nq, nk = sq // qc, skv // kc
+    assert sq % qc == 0 and skv % kc == 0, (sq, qc, skv, kc)
+
+    qg = q.reshape(b, hkv, g, nq, qc, d).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(b, hkv, nk, kc, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nk, kc, d).transpose(2, 0, 1, 3, 4)
+
+    def per_q_chunk(qi, q_blk):
+        qpos = q0 + qi * qc + jnp.arange(qc)
+
+        def inner(carry, inp):
+            ki, k_blk, v_blk = inp
+            kpos = ki * kc + jnp.arange(kc)
+            carry = _online_step(carry, q_blk, k_blk, v_blk, qpos, kpos,
+                                 causal=causal, window=window, cap=cap)
+            return carry, None
+
+        acc0 = jnp.zeros((b, hkv, g, qc, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            inner, (acc0, m0, l0), (jnp.arange(nk), ks, vs))
+        return _finalize(acc, l, q.dtype)
+
+    _, out = jax.lax.scan(
+        lambda carry, inp: (carry, per_q_chunk(inp[0], inp[1])),
+        None, (jnp.arange(nq), qg))
+    # out: (nq, B, Hkv, G, qc, D) -> (B, Hq, Sq, D)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, d)
+    return out
+
+
+def tri_unroll_attention(q, k, v, *, causal=True, window=None, cap=None,
+                         q_chunk=1024, kv_chunk=1024, q0: int = 0):
+    """Causal-aware chunking: q chunk i only visits kv chunks in its
+    footprint ([max(0, i-w) .. i] for windowed, [0 .. i] for causal).
+    Python-unrolled outer loop — ~2x FLOPs saving vs. scan_kv."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    nq, nk = sq // qc, skv // kc
+    assert sq % qc == 0 and skv % kc == 0
+    assert q0 == 0, "tri_unroll assumes aligned q/kv starts"
+
+    qg = q.reshape(b, hkv, g, nq, qc, d)
+    ks = k.reshape(b, hkv, nk, kc, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nk, kc, d).transpose(2, 0, 1, 3, 4)
+
+    outs = []
+    for qi in range(nq):
+        q_blk = qg[:, :, :, qi]
+        qpos = qi * qc + jnp.arange(qc)
+        # static causal/window footprint for this q chunk
+        hi = min(nk - 1, ((qi + 1) * qc - 1) // kc) if causal else nk - 1
+        lo = 0
+        if window is not None:
+            lo = max(0, (qi * qc - window) // kc)
+        idx = jnp.arange(lo, hi + 1)
+
+        def inner(carry, inp, qpos=qpos, q_blk=q_blk):
+            ki, k_blk, v_blk = inp
+            kpos = ki * kc + jnp.arange(kc)
+            carry = _online_step(carry, q_blk, k_blk, v_blk, qpos, kpos,
+                                 causal=causal, window=window, cap=cap)
+            return carry, None
+
+        acc0 = jnp.zeros((b, hkv, g, qc, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            inner, (acc0, m0, l0), (idx, ks[lo:hi + 1], vs[lo:hi + 1]))
+        outs.append(_finalize(acc, l, q.dtype))
+    out = jnp.stack(outs, axis=3)          # (B,Hkv,G,nq,qc,D)
+    return out.reshape(b, hkv, g, sq, d).reshape(b, hq, sq, d)
+
+
+def attention(cfg, q, k, v, *, causal=True, window=None, cap=None,
+              q0: int = 0, impl: Optional[str] = None):
+    impl = impl or cfg.attn_impl
+    sq, skv = q.shape[2], k.shape[2]
+    if impl == "dense" or (sq <= cfg.q_chunk and skv <= cfg.kv_chunk):
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               cap=cap, q0=q0)
+    if impl == "scan_kv":
+        return scan_kv_attention(q, k, v, causal=causal, window=window,
+                                 cap=cap, q_chunk=cfg.q_chunk,
+                                 kv_chunk=cfg.kv_chunk, q0=q0)
+    if impl == "tri_unroll":
+        return tri_unroll_attention(q, k, v, causal=causal, window=window,
+                                    cap=cap, q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk, q0=q0)
+    raise ValueError(f"unknown attn impl {impl}")
+
+
+def decode_attention(q, kcache, vcache, cur_len, *, window=None, cap=None):
+    """Single-token decode: q (B,Hq,1,D) vs cache (B,Hkv,Smax,D).
+
+    ``cur_len``: number of valid cache entries (the new token's position is
+    cur_len-1 after insertion). Memory-bound by design.
+    """
+    b, hq, _, d = q.shape
+    hkv, smax = kcache.shape[1], kcache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, 1, d)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kcache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    kpos = jnp.arange(smax)
+    keep = kpos[None] < cur_len                     # (B?, Smax) or (1,Smax)
+    if window is not None:
+        keep = keep & (kpos[None] > cur_len - 1 - window)
+    s = jnp.where(keep[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vcache.dtype), vcache)
+    return out.reshape(b, hq, 1, d)

@@ -1,0 +1,225 @@
+"""Layer application per family + scan-over-layers segment machinery.
+
+Every full-sequence layer fn has signature
+    fn(x, p_layer) -> (x, cache_entry, aux)
+and every decode layer fn
+    fn(x, p_layer, cache_entry) -> (x, new_cache_entry)
+so segments can be driven uniformly by jax.lax.scan over the stacked layer
+axis (keeping HLO size ~one layer regardless of depth). Remat is applied to
+the layer body per cfg.remat.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, decode_attention
+from .common import act_fn, apply_norm, apply_rope
+from .mla import mla_attention_train, mla_decode_step
+from .mamba2 import mamba2_mixer
+from .moe import moe_ffn
+from .rwkv6 import channel_mix, time_mix
+
+
+# ------------------------------------------------------------- primitives
+def _norm(cfg, p, key, x):
+    return apply_norm(cfg, x, p.get(key))
+
+
+def qkv_project(cfg, p, x, positions):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(cfg, p, o):
+    b, h, s, hd = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"])
+
+
+def self_attention_full(cfg, p, x, positions, window, *, causal=True):
+    q, k, v = qkv_project(cfg, p, x, positions)
+    o = attention(cfg, q, k, v, causal=causal, window=window,
+                  cap=cfg.attn_softcap)
+    return attn_out(cfg, p, o), (k, v)
+
+
+def self_attention_decode(cfg, p, x, kcache, vcache, cur_len, window):
+    """x: (B,1,d); caches (B,Hkv,Smax,hd). Inserts then attends."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cur_len)
+    q, k, v = qkv_project(cfg, p, x, positions)
+    kcache = jax.lax.dynamic_update_slice(
+        kcache, k.astype(kcache.dtype), (0, 0, cur_len, 0))
+    vcache = jax.lax.dynamic_update_slice(
+        vcache, v.astype(vcache.dtype), (0, 0, cur_len, 0))
+    o = decode_attention(q, kcache, vcache, cur_len + 1, window=window,
+                         cap=cfg.attn_softcap)
+    return attn_out(cfg, p, o), kcache, vcache
+
+
+def mlp(cfg, p, x):
+    a = act_fn(cfg.act)
+    h = a(jnp.einsum("bsd,df->bsf", x, p["wg"])) \
+        * jnp.einsum("bsd,df->bsf", x, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+
+
+# --------------------------------------------------------- residual layers
+def dense_layer_full(cfg, p, x, positions, window, *, causal=True,
+                     ffn: str = "mlp"):
+    """Pre-norm transformer layer; gemma2 adds post (sandwich) norms."""
+    h = _norm(cfg, p, "ln1", x)
+    attn, kv = self_attention_full(cfg, p, h, positions, window,
+                                   causal=causal)
+    if cfg.post_norms:
+        attn = apply_norm(cfg, attn, p.get("post_ln1"))
+    x = x + attn
+    h = _norm(cfg, p, "ln2", x)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "moe":
+        out, aux = moe_ffn(cfg, p, h)
+    else:
+        out = mlp(cfg, p, h)
+    if cfg.post_norms:
+        out = apply_norm(cfg, out, p.get("post_ln2"))
+    return x + out, kv, aux
+
+
+def dense_layer_decode(cfg, p, x, kcache, vcache, cur_len, window,
+                       ffn: str = "mlp"):
+    h = _norm(cfg, p, "ln1", x)
+    attn, kcache, vcache = self_attention_decode(
+        cfg, p, h, kcache, vcache, cur_len, window)
+    if cfg.post_norms:
+        attn = apply_norm(cfg, attn, p.get("post_ln1"))
+    x = x + attn
+    h = _norm(cfg, p, "ln2", x)
+    if ffn == "moe":
+        out, _ = moe_ffn(cfg, p, h)
+    else:
+        out = mlp(cfg, p, h)
+    if cfg.post_norms:
+        out = apply_norm(cfg, out, p.get("post_ln2"))
+    return x + out, kcache, vcache
+
+
+def mla_layer_full(cfg, p, x, positions, ffn: str, collect: bool = False):
+    h = _norm(cfg, p, "ln1", x)
+    if collect:
+        attn, cache = mla_attention_train(cfg, p, h, positions,
+                                          return_cache=True)
+    else:
+        attn, cache = mla_attention_train(cfg, p, h, positions), None
+    x = x + attn
+    h = _norm(cfg, p, "ln2", x)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "moe":
+        out, aux = moe_ffn(cfg, p, h)
+    else:
+        out = mlp(cfg, p, h)
+    return x + out, cache, aux
+
+
+def mla_layer_decode(cfg, p, x, ckv_cache, krope_cache, cur_len, ffn: str):
+    h = _norm(cfg, p, "ln1", x)
+    attn, ckv_cache, krope_cache = mla_decode_step(
+        cfg, p, h, ckv_cache, krope_cache, cur_len + 1)
+    x = x + attn
+    h = _norm(cfg, p, "ln2", x)
+    out = moe_ffn(cfg, p, h)[0] if ffn == "moe" else mlp(cfg, p, h)
+    return x + out, ckv_cache, krope_cache
+
+
+def rwkv_layer_full(cfg, p, x, att_state, chunk=16):
+    """att_state: (B,H,dk,dv) f32 initial state. Returns final states for
+    streaming handoff (prefill->decode)."""
+    b = x.shape[0]
+    h = _norm(cfg, p, "ln1", x)
+    xprev0 = jnp.zeros((b, cfg.d_model), x.dtype)
+    att, att_xprev, att_state = time_mix(cfg, p, h, xprev0, att_state,
+                                         chunk=chunk)
+    x = x + att
+    h = _norm(cfg, p, "ln2", x)
+    ffn, cmix_xprev = channel_mix(cfg, p, h, jnp.zeros_like(xprev0))
+    return x + ffn, (att_xprev, att_state, cmix_xprev)
+
+
+def rwkv_layer_decode(cfg, p, x, cache):
+    att_xprev, att_state, cmix_xprev = cache
+    h = _norm(cfg, p, "ln1", x)
+    att, att_xprev, att_state = time_mix(cfg, p, h, att_xprev, att_state,
+                                         decode=True)
+    x = x + att
+    h = _norm(cfg, p, "ln2", x)
+    ffn, cmix_xprev = channel_mix(cfg, p, h, cmix_xprev)
+    return x + ffn, (att_xprev, att_state, cmix_xprev)
+
+
+def mamba_layer_full(cfg, p, x, state, chunk=64):
+    h = _norm(cfg, p, "ln1", x)
+    out, state, conv_cache = mamba2_mixer(cfg, p, h, state, None,
+                                          chunk=chunk)
+    return x + out, (state, conv_cache)
+
+
+def mamba_layer_decode(cfg, p, x, cache):
+    state, conv_cache = cache
+    h = _norm(cfg, p, "ln1", x)
+    out, state, conv_cache = mamba2_mixer(cfg, p, h, state, conv_cache,
+                                          decode=True)
+    return x + out, (state, conv_cache)
+
+
+def cross_attention_full(cfg, p, x, memory):
+    """Decoder cross-attn over encoder memory. Returns (out, (xk, xv))."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = apply_norm(cfg, x, p.get("xln"))
+    q = jnp.einsum("bsd,de->bse", h, p["xwq"]).reshape(
+        b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,de->bse", memory, p["xwk"]).reshape(
+        b, memory.shape[1], hkv, hd).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,de->bse", memory, p["xwv"]).reshape(
+        b, memory.shape[1], hkv, hd).transpose(0, 2, 1, 3)
+    o = attention(cfg, q, k, v, causal=False)
+    b2, hh, s2, hd2 = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(b2, s2, hh * hd2)
+    return jnp.einsum("bse,ed->bsd", o, p["xwo"]), (k, v)
+
+
+def cross_attention_decode(cfg, p, x, xk, xv):
+    """Cross-attn with precomputed memory K/V (full memory visible)."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = apply_norm(cfg, x, p.get("xln"))
+    q = jnp.einsum("bsd,de->bse", h, p["xwq"]).reshape(
+        b, s, hq, hd).transpose(0, 2, 1, 3)
+    o = decode_attention(q, xk, xv, xk.shape[2])
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return jnp.einsum("bse,ed->bsd", o, p["xwo"])
+
+
+# ---------------------------------------------------------------- wrappers
+def remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)

@@ -1,0 +1,145 @@
+"""Shared numerical building blocks (norms, RoPE, activations, init)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x: jnp.ndarray, weight: Optional[jnp.ndarray],
+             eps: float = 1e-6, plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32 (weight=None -> non-parametric, olmo-style)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        w = weight.astype(jnp.float32)
+        xf = xf * (1.0 + w if plus_one else w)
+    return xf.astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, weight: Optional[jnp.ndarray],
+               bias: Optional[jnp.ndarray], eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        xf = xf * weight.astype(jnp.float32)
+    if bias is not None:
+        xf = xf + bias.astype(jnp.float32)
+    return xf.astype(dt)
+
+
+def apply_norm(cfg, x: jnp.ndarray, w) -> jnp.ndarray:
+    if cfg.norm == "rms":
+        plus_one = cfg.name.startswith("gemma")
+        return rms_norm(x, w, plus_one=plus_one)
+    if cfg.norm == "nonparam":
+        return layer_norm(x, None, None)
+    return layer_norm(x, w, None)
+
+
+# ------------------------------------------------------------------- rope
+def rope_freqs(d: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- activations
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- init
+def dense_init(key, shape, dtype, in_axis: int = -2) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Split keys on demand: kg = KeyGen(key); w = init(kg(), ...)."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------- sharding
+def with_sharding(x: jnp.ndarray, spec) -> jnp.ndarray:
+    """Annotate intermediate sharding if a mesh context is active."""
+    try:
+        from jax.sharding import PartitionSpec as P  # noqa
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def shard_seq(x: jnp.ndarray) -> jnp.ndarray:
+    """Sequence-parallel residual-stream constraint: (B, S, d) sharded
+    batch->DP, sequence->'model'. Forces XLA to keep the residual stream
+    sequence-sharded between blocks, turning the Megatron all-reduces into
+    reduce-scatter(+all-gather only where attention needs full sequence) —
+    roughly half the TP collective bytes (§Perf iteration B1).
+
+    No-op when no mesh is active or dims don't divide.
+    """
+    try:
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            return x
+        msize = mesh.shape["model"]
+        if x.ndim != 3 or x.shape[1] % msize:
+            return x
+        dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+        dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+        if dp_spec is not None:
+            dp_total = 1
+            for a in (dp if isinstance(dp, tuple) else (dp,)):
+                dp_total *= mesh.shape[a]
+            if x.shape[0] % dp_total:
+                dp_spec = None
+        return jax.lax.with_sharding_constraint(
+            x, P(dp_spec, "model", None))
+    except (ValueError, RuntimeError, KeyError, TypeError):
+        return x

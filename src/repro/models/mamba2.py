@@ -1,0 +1,147 @@
+"""Mamba-2 (SSD) mixer (arXiv:2405.21060), used by zamba2's backbone.
+
+Scalar-per-head decay SSD recurrence, per head of size P with state N:
+
+    h_t = a_t * h_{t-1} + dt_t * x_t B_t^T        h in R^{P x N}
+    y_t = h_t C_t + D * x_t
+
+with a_t = exp(-softplus(A) * dt_t) in (0,1). Train/prefill use the chunked
+parallel (matmul-rich, MXU-friendly) form; decode is the O(1) recurrence.
+A depthwise causal conv (kernel 4) precedes the SSM on x/B/C as in Mamba.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x, dt, a_log, B, C, D, state, chunk: int = 64):
+    """Chunked SSD scan.
+
+    x: (b,s,h,p); dt: (b,s,h); a_log: (h,) (A = -softplus? stored as log);
+    B,C: (b,s,n); state: (b,h,p,n) fp32. Returns (y, state_out).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    la = -jnp.exp(a_log.astype(jnp.float32))                  # (h,) < 0
+    dla = dtf * la[None, None, :]                             # (b,s,h) logdecay
+
+    def r(t, d):
+        return t.reshape(b, nc, c, *t.shape[2:]).transpose(1, 0, *range(2, d))
+
+    xs = xf.reshape(b, nc, c, h, p).transpose(1, 0, 2, 3, 4)
+    dts = dtf.reshape(b, nc, c, h).transpose(1, 0, 2, 3)
+    dls = dla.reshape(b, nc, c, h).transpose(1, 0, 2, 3)
+    Bs = B.astype(jnp.float32).reshape(b, nc, c, n).transpose(1, 0, 2, 3)
+    Cs = C.astype(jnp.float32).reshape(b, nc, c, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32))             # incl. diag
+
+    def per_chunk(S, inp):
+        xc, dtc, dlc, Bc, Cc = inp
+        L = jnp.cumsum(dlc, axis=1)                           # (b,c,h) incl.
+        Lex = L - dlc                                         # exclusive
+        # inter-chunk: y_t += (C_t) . (e^{L_t incl?}) -- state decayed by
+        # all decays up to and including t
+        decay_in = jnp.exp(L)                                 # (b,c,h)
+        y = jnp.einsum("bcn,bhpn,bch->bchp", Cc, S, decay_in)
+        # intra-chunk: pairwise decay e^{L_t - L_s} for s<=t. The mask is
+        # applied INSIDE the exp: for t<s the diff is positive and would
+        # overflow fp32 before the mask could zero it (inf * 0 = NaN).
+        diff = L[:, :, None, :] - L[:, None, :, :]            # (b,t,s,h)
+        diff = jnp.where(tri[None, :, :, None] > 0, diff, -jnp.inf)
+        G = jnp.exp(diff)
+        att = jnp.einsum("btn,bsn,btsh->bths", Cc, Bc, G)
+        y = y + jnp.einsum("bths,bsh,bshp->bthp", att, dtc, xc)
+        # state update
+        Ltot = L[:, -1:, :]                                   # (b,1,h)
+        carry_decay = jnp.exp(Ltot - L)                       # (b,c,h)
+        S = S * jnp.exp(Ltot)[:, 0, :, None, None] + jnp.einsum(
+            "bsh,bshp,bsn->bhpn", dtc * carry_decay, xc, Bc)
+        return S, y
+
+    state_out, ys = jax.lax.scan(per_chunk, state.astype(jnp.float32),
+                                 (xs, dts, dls, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), state_out
+
+
+def ssd_decode(x, dt, a_log, B, C, D, state):
+    """One-token recurrence. x:(b,h,p); dt:(b,h); B,C:(b,n);
+    state (b,h,p,n) fp32."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * (-jnp.exp(a_log.astype(jnp.float32)))[None, :])
+    state = state * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtf, xf, B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, C.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), state
+
+
+def causal_conv(x, w, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x: (b,s,d); w: (k,d).
+
+    With ``cache`` ((b,k-1,d)) performs streaming (decode) convolution and
+    returns the updated cache.
+    """
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(k))
+    new_cache = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_cache
+
+
+def mamba2_mixer(cfg, p, x, state, conv_cache, *, decode: bool = False,
+                 chunk: int = 64):
+    """Full Mamba-2 block mixer.
+
+    x: (b,s,d); state: (b,h,p,n) fp32; conv_cache: (b,k-1,conv_dim).
+    Returns (out, state, conv_cache).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = cfg.d_inner
+    pdim = di // h
+    n = cfg.ssm_state
+    # projections split into a TP-shardable (z,x) part and a small
+    # replicated (B,C,dt) part (see distributed/shardings.py)
+    zx = jnp.einsum("bsd,de->bse", x, p["in_zx"])
+    z, xin = jnp.split(zx, [di], axis=-1)
+    bcdt = jnp.einsum("bsd,de->bse", x, p["in_bcdt"])
+    Bc, Cc, dt = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_cache = causal_conv(conv_in, p["conv_w"], conv_cache)
+    xin = conv_out[..., :di]
+    Bc = conv_out[..., di:di + n]
+    Cc = conv_out[..., di + n:]
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None])       # (b,s,h)
+    xh = xin.reshape(b, s, h, pdim)
+    if decode:
+        y, state = ssd_decode(xh[:, 0], dt[:, 0], p["a_log"], Bc[:, 0],
+                              Cc[:, 0], p["D"], state)
+        y = y[:, None]
+    else:
+        y, state = ssd_chunked(xh, dt, p["a_log"], Bc, Cc, p["D"], state,
+                               chunk=chunk)
+    y = y.reshape(b, s, di)
+    # gated rmsnorm (mamba2 style)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["out_norm"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", yf.astype(x.dtype), p["out_proj"])
+    return out, state, conv_cache

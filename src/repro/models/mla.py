@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Keys/values are compressed into a per-token latent c_kv of rank
+``kv_lora_rank`` plus a shared (per-token, not per-head) RoPE key of
+``qk_rope_dim``. Train/prefill expand the latent into per-head K/V (naive
+path); decode uses the *absorbed* formulation — the K/V up-projections are
+folded into the query/output so the KV cache stays (kv_lora + rope) per
+token regardless of head count. That 512+64 cache (vs H*2*d_head = 32768
+for vanilla GQA at 128 heads) is the whole point of MLA.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, attention
+from .common import apply_rope, rms_norm, softcap
+
+
+def mla_project_qkv(cfg, p, x, positions):
+    """Naive expansion used by train/prefill.
+
+    Returns q (B,H,S,nope+rope), k (B,H,S,nope+rope), v (B,H,S,v_dim).
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    # --- queries (LoRA) ---
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["q_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq,
+                   p["q_b"].reshape(cfg.q_lora_rank, h, nope + rope))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions[:, None],
+                        cfg.rope_theta).transpose(0, 2, 1, 3)
+    # --- compressed kv ---
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["kv_a"])
+    ckv, k_rope = ckv_full[..., :cfg.kv_lora_rank], \
+        ckv_full[..., cfg.kv_lora_rank:]
+    ckv = rms_norm(ckv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, None], positions[:, None],
+                        cfg.rope_theta)                      # (B,1,S,rope)
+    kv = jnp.einsum("bsr,rhe->bshe", ckv,
+                    p["kv_b"].reshape(cfg.kv_lora_rank, h, nope + vdim))
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k_rope_bshe = jnp.broadcast_to(
+        k_rope.transpose(0, 2, 1, 3),                       # (B,S,1,rope)
+        (b, s, h, rope))
+    k = jnp.concatenate([k_nope, k_rope_bshe], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # to (B,H,S,D)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), ckv, k_rope)
+
+
+def mla_attention_train(cfg, p, x, positions, *, impl=None,
+                        return_cache=False):
+    """Full-sequence MLA attention (naive expansion).
+
+    return_cache: also return (ckv (B,S,r), k_rope (B,S,rope)) — the
+    compressed per-token latents that seed the absorbed decode cache.
+    """
+    q, k, v, ckv, k_rope = mla_project_qkv(cfg, p, x, positions)
+    # pad v to qk head dim for the shared attention kernel, then slice
+    dqk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    vdim = cfg.v_head_dim
+    if vdim < dqk:
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - vdim)))
+    else:
+        vp = v
+    out = attention(cfg, q, k, vp, causal=True, impl=impl)
+    out = out[..., :vdim]                                  # (B,H,S,v)
+    b, h, s, _ = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
+    out = jnp.einsum("bsf,fd->bsd", out, p["o"]).astype(x.dtype)
+    if return_cache:
+        return out, (ckv, k_rope[:, 0])                    # krope (B,S,rope)
+    return out
+
+
+def mla_decode_step(cfg, p, x, ckv_cache, krope_cache, cur_len):
+    """Absorbed decode. x: (B,1,d).
+
+    cache: ckv (B, Smax, kv_lora), k_rope (B, Smax, rope).
+    Returns (out (B,1,d), new caches).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    pos = cur_len - 1
+    positions = jnp.full((b, 1), pos)
+
+    # query
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["q_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq,
+                   p["q_b"].reshape(cfg.q_lora_rank, h, nope + rope))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]           # (B,1,H,*)
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions[:, None],
+                        cfg.rope_theta).transpose(0, 2, 1, 3)
+
+    # new latent kv, inserted into cache
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["kv_a"])
+    ckv_new = rms_norm(ckv_full[..., :r], p["kv_norm"])     # (B,1,r)
+    krope_new = apply_rope(ckv_full[..., r:], positions,
+                           cfg.rope_theta)                  # (B,1,rope)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, ckv_new.astype(ckv_cache.dtype), (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, krope_new.astype(krope_cache.dtype), (0, pos, 0))
+
+    # absorb W_kv_b(K part) into the query: q_lat (B,H,r)
+    wkb = p["kv_b"].reshape(r, h, nope + vdim)
+    wk, wv = wkb[..., :nope], wkb[..., nope:]
+    q_lat = jnp.einsum("bshe,rhe->bhr", q_nope, wk)         # (B,H,r)
+
+    scale = 1.0 / math.sqrt(nope + rope)
+    s_lat = jnp.einsum("bhr,bkr->bhk", q_lat,
+                       ckv_cache.astype(q_lat.dtype),
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhse,bke->bhk", q_rope.transpose(0, 2, 1, 3),
+                        krope_cache.astype(q_rope.dtype),
+                        preferred_element_type=jnp.float32)
+    s = (s_lat + s_rope) * scale                            # (B,H,Smax)
+    kpos = jnp.arange(ckv_cache.shape[1])
+    s = jnp.where(kpos[None, None, :] < cur_len, s, NEG_INF)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    ctx = jnp.einsum("bhk,bkr->bhr", pr.astype(ckv_cache.dtype),
+                     ckv_cache)                             # (B,H,r)
+    out_h = jnp.einsum("bhr,rhe->bhe", ctx, wv)             # (B,H,v)
+    out = out_h.reshape(b, h * vdim)[:, None, :]            # (B,1,H*v)
+    out = jnp.einsum("bsf,fd->bsd", out, p["o"]).astype(x.dtype)
+    return out, ckv_cache, krope_cache

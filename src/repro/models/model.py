@@ -1,0 +1,507 @@
+"""Top-level LM: embedding -> segment scans -> norm -> (chunked) loss,
+plus serving entry points (prefill / single-token decode with caches).
+
+Public entry points (all pure, jit-friendly; cfg passed statically):
+
+  train_loss(cfg, params, batch)                   -> scalar loss
+  forward_full(cfg, params, batch, collect=False)  -> hidden[, caches]
+  prefill(cfg, params, batch, max_len)             -> (last_logits, cache)
+  decode_step(cfg, params, cache, tokens, cur_len) -> (logits, cache)
+
+Batch schema by family (labels use -1 for masked positions):
+  dense/moe/ssm/hybrid: {tokens (B,S) i32, labels (B,S) i32}
+  vlm frontend:  + {vision_embeds (B,T_img,1024)}; tokens are text-only
+  encdec:        {frames (B,S_enc,d), dec_tokens (B,S_dec), labels}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as B
+from .common import apply_norm, softcap
+from .config import ModelConfig
+
+AUX_WEIGHT = 0.01
+
+
+def _largest_divisor(n: int, target: int) -> int:
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+# ------------------------------------------------------------ embeddings
+def embed(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def build_inputs(cfg, params, batch):
+    """Returns (x (B,S,d), labels (B,S), positions (B,S))."""
+    tokens = batch["tokens"]
+    x = embed(cfg, params, tokens)
+    labels = batch.get("labels")
+    if cfg.frontend == "vision":
+        vis = jnp.einsum("bte,ed->btd", batch["vision_embeds"],
+                         params["mm_proj"]).astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        if labels is not None:
+            pad = jnp.full(vis.shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, labels, positions
+
+
+# ------------------------------------------------------- segment runners
+def seg_scan(cfg, body, carry, stacked):
+    """lax.scan over the stacked layer axis, or an unrolled python loop
+    when cfg.scan_layers=False.
+
+    Unrolled mode exists for the dry-run's exact-cost extrapolation:
+    XLA's cost_analysis counts a while-loop body ONCE, so depth-1/depth-2
+    unrolled variants are lowered to solve per-layer FLOPs/bytes exactly
+    (launch/dryrun.py). Training/serving always use the scanned form.
+    """
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        inp = jax.tree_util.tree_map(lambda t: t[i], stacked)
+        carry, y = body(carry, inp)
+        ys.append(y)
+    ys_stacked = jax.tree_util.tree_map(lambda *x: jnp.stack(x), *ys)
+    return carry, ys_stacked
+
+
+def _window_for(cfg, which: str) -> Optional[int]:
+    if cfg.layer_pattern == "local_global":
+        return cfg.sliding_window if which == "local" else None
+    return cfg.sliding_window
+
+
+def run_dense_full(cfg, params_blocks, x, positions, *, ffn="mlp",
+                   collect=False, causal=True):
+    """Scan over stacked dense/moe layers (handles gemma2 pairs)."""
+    paired = cfg.layer_pattern == "local_global"
+
+    def body(x, p_l):
+        if paired:
+            x, kv_l, aux_l = B.dense_layer_full(
+                cfg, p_l["local"], x, positions,
+                _window_for(cfg, "local"), ffn=ffn, causal=causal)
+            x, kv_g, aux_g = B.dense_layer_full(
+                cfg, p_l["global"], x, positions,
+                _window_for(cfg, "global"), ffn=ffn, causal=causal)
+            kv = (jnp.stack([kv_l[0], kv_g[0]]),
+                  jnp.stack([kv_l[1], kv_g[1]])) if collect else None
+            aux = aux_l + aux_g
+        else:
+            x, kv2, aux = B.dense_layer_full(
+                cfg, p_l, x, positions, _window_for(cfg, "global"),
+                ffn=ffn, causal=causal)
+            kv = kv2 if collect else None
+        if cfg.seq_shard:
+            from .common import shard_seq
+            x = shard_seq(x)
+        return x, (kv, aux)
+
+    if cfg.seq_shard:
+        from .common import shard_seq
+        x = shard_seq(x)
+    x, (kvs, auxs) = seg_scan(cfg, B.remat_wrap(cfg, body), x, params_blocks)
+    return x, kvs, jnp.sum(auxs)
+
+
+def run_dense_decode(cfg, params_blocks, x, kcache, vcache, cur_len,
+                     ffn="mlp"):
+    paired = cfg.layer_pattern == "local_global"
+
+    def body(x, inp):
+        p_l, kc, vc = inp
+        if paired:
+            x, kc0, vc0 = B.dense_layer_decode(
+                cfg, p_l["local"], x, kc[0], vc[0], cur_len,
+                _window_for(cfg, "local"), ffn=ffn)
+            x, kc1, vc1 = B.dense_layer_decode(
+                cfg, p_l["global"], x, kc[1], vc[1], cur_len,
+                _window_for(cfg, "global"), ffn=ffn)
+            return x, (jnp.stack([kc0, kc1]), jnp.stack([vc0, vc1]))
+        x, kc, vc = B.dense_layer_decode(
+            cfg, p_l, x, kc, vc, cur_len, _window_for(cfg, "global"),
+            ffn=ffn)
+        return x, (kc, vc)
+
+    x, (kcache, vcache) = seg_scan(cfg, body, x,
+                                   (params_blocks, kcache, vcache))
+    return x, kcache, vcache
+
+
+def run_mla_full(cfg, params, x, positions, collect=False):
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    if "dense_blocks" in params:
+        def body_d(x, p_l):
+            x, cache, aux = B.mla_layer_full(cfg, p_l, x, positions,
+                                             ffn="mlp", collect=collect)
+            return x, (cache, aux)
+        x, (dcaches, auxs) = seg_scan(cfg, B.remat_wrap(cfg, body_d), x,
+                                      params["dense_blocks"])
+        caches["dense"] = dcaches
+        aux_total += jnp.sum(auxs)
+
+    def body(x, p_l):
+        x, cache, aux = B.mla_layer_full(cfg, p_l, x, positions, ffn="moe",
+                                         collect=collect)
+        return x, (cache, aux)
+    x, (mcaches, auxs) = seg_scan(cfg, B.remat_wrap(cfg, body), x,
+                                  params["blocks"])
+    caches["moe"] = mcaches
+    aux_total += jnp.sum(auxs)
+    return x, caches, aux_total
+
+
+def run_ssm_full(cfg, params_blocks, x, chunk=16):
+    b = x.shape[0]
+    h = cfg.n_heads
+    dk = cfg.d_model // h
+
+    def body(x, p_l):
+        state0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+        x, cache = B.rwkv_layer_full(cfg, p_l, x, state0, chunk=chunk)
+        return x, cache
+
+    x, caches = seg_scan(cfg, B.remat_wrap(cfg, body), x, params_blocks)
+    return x, caches
+
+
+def run_ssm_decode(cfg, params_blocks, x, cache):
+    def body(x, inp):
+        p_l, cache_l = inp
+        x, cache_l = B.rwkv_layer_decode(cfg, p_l, x, cache_l)
+        return x, cache_l
+    x, cache = seg_scan(cfg, body, x, (params_blocks, cache))
+    return x, cache
+
+
+def run_hybrid_full(cfg, params, x, positions, collect=False):
+    """zamba2: periods of mamba layers, each followed by the one shared
+    attention block; then a tail of mamba layers."""
+    b = x.shape[0]
+    shared = params["shared_attn"]
+    h, pd, n = cfg.n_heads, cfg.d_inner // cfg.n_heads, cfg.ssm_state
+
+    def mamba_scan(x, stacked):
+        def body(x, p_l):
+            state0 = jnp.zeros((b, h, pd, n), jnp.float32)
+            x, cache = B.mamba_layer_full(cfg, p_l, x, state0)
+            return x, cache
+        return seg_scan(cfg, B.remat_wrap(cfg, body), x, stacked)
+
+    def period_body(x, p_period):
+        x, mcaches = mamba_scan(x, p_period)
+        x, kv, _ = B.dense_layer_full(cfg, shared, x, positions, None)
+        return x, (mcaches, kv if collect else None)
+
+    x, (mcaches, kvs) = seg_scan(cfg, B.remat_wrap(cfg, period_body), x,
+                                 params["blocks"])
+    tcaches = None
+    if "tail_blocks" in params:
+        x, tcaches = mamba_scan(x, params["tail_blocks"])
+    return x, (mcaches, kvs, tcaches)
+
+
+def run_hybrid_decode(cfg, params, x, cache, cur_len):
+    shared = params["shared_attn"]
+
+    def mamba_decode_scan(x, stacked, caches):
+        def body(x, inp):
+            p_l, c_l = inp
+            x, c_l = B.mamba_layer_decode(cfg, p_l, x, c_l)
+            return x, c_l
+        return seg_scan(cfg, body, x, (stacked, caches))
+
+    def period_body(x, inp):
+        p_period, mcache, kc, vc = inp
+        x, mcache = mamba_decode_scan(x, p_period, mcache)
+        x, kc, vc = B.dense_layer_decode(cfg, shared, x, kc, vc, cur_len,
+                                         None)
+        return x, (mcache, kc, vc)
+
+    x, (mcache, kc, vc) = seg_scan(
+        cfg, period_body, x,
+        (params["blocks"], cache["mamba"], cache["k"], cache["v"]))
+    tail = cache.get("tail")
+    if "tail_blocks" in params:
+        x, tail = mamba_decode_scan(x, params["tail_blocks"], tail)
+    return x, {"mamba": mcache, "k": kc, "v": vc, "tail": tail}
+
+
+def run_encdec_full(cfg, params, frames, dec_x, dec_positions,
+                    collect=False):
+    b, s_enc = frames.shape[:2]
+    enc_positions = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+
+    def enc_body(x, p_l):
+        x, _, _ = B.dense_layer_full(cfg, p_l, x, enc_positions, None,
+                                     causal=False)
+        return x, None
+    memory, _ = seg_scan(cfg, B.remat_wrap(cfg, enc_body), frames,
+                         params["enc_blocks"])
+    memory = apply_norm(cfg, memory, params.get("enc_final_norm"))
+
+    def dec_body(x, p_l):
+        x, kv, _ = B.dense_layer_full(cfg, p_l, x, dec_positions, None)
+        xo, xkv = B.cross_attention_full(cfg, p_l, x, memory)
+        x = x + xo
+        return x, ((kv, xkv) if collect else None)
+    x, caches = seg_scan(cfg, B.remat_wrap(cfg, dec_body), dec_x,
+                         params["dec_blocks"])
+    return x, memory, caches
+
+
+def run_encdec_decode(cfg, params, x, cache, cur_len):
+    def body(x, inp):
+        p_l, kc, vc, xk, xv = inp
+        x, kc, vc = B.dense_layer_decode(cfg, p_l, x, kc, vc, cur_len, None)
+        x = x + B.cross_attention_decode(cfg, p_l, x, xk, xv)
+        return x, (kc, vc)
+    x, (kc, vc) = seg_scan(
+        cfg, body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                       cache["xk"], cache["xv"]))
+    return x, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+# --------------------------------------------------------------- full fwd
+def forward_full(cfg, params, batch, collect=False):
+    """Returns (hidden (B,S,d), labels, caches, aux)."""
+    if cfg.family == "encdec":
+        dec_tokens = batch["dec_tokens"]
+        dec_x = embed(cfg, params, dec_tokens)
+        b, s = dec_x.shape[:2]
+        dec_positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x, memory, caches = run_encdec_full(
+            cfg, params, batch["frames"].astype(cfg.param_dtype), dec_x,
+            dec_positions, collect=collect)
+        x = apply_norm(cfg, x, params.get("final_norm"))
+        return x, batch.get("labels"), (caches, memory), \
+            jnp.zeros((), jnp.float32)
+
+    x, labels, positions = build_inputs(cfg, params, batch)
+    aux = jnp.zeros((), jnp.float32)
+    caches = None
+    if cfg.family == "dense":
+        x, caches, aux = run_dense_full(cfg, params["blocks"], x, positions,
+                                        ffn="mlp", collect=collect)
+    elif cfg.family == "moe" and cfg.mla:
+        x, caches, aux = run_mla_full(cfg, params, x, positions,
+                                      collect=collect)
+    elif cfg.family == "moe":
+        x, caches, aux = run_dense_full(cfg, params["blocks"], x, positions,
+                                        ffn="moe", collect=collect)
+    elif cfg.family == "ssm":
+        x = apply_norm(cfg, x, params.get("ln0"))
+        x, caches = run_ssm_full(cfg, params["blocks"], x)
+    elif cfg.family == "hybrid":
+        x, caches = run_hybrid_full(cfg, params, x, positions,
+                                    collect=collect)
+    else:
+        raise ValueError(cfg.family)
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    return x, labels, caches, aux
+
+
+# ------------------------------------------------------------------- loss
+def unembed_chunk(cfg, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", h, w,
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def loss_from_hidden(cfg, params, hidden, labels):
+    """Chunked next-token CE: prediction at position t scores labels[t+1].
+    labels == -1 are ignored. Never materializes (B,S,V)."""
+    b, s, d = hidden.shape
+    h = hidden[:, :-1]
+    y = labels[:, 1:]
+    sl = s - 1
+    c = _largest_divisor(sl, cfg.loss_chunk)
+    nchunk = sl // c
+    h = h.reshape(b, nchunk, c, d).transpose(1, 0, 2, 3)
+    y = y.reshape(b, nchunk, c).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        hc, yc = inp
+        logits = unembed_chunk(cfg, params, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        mask = (yc >= 0).astype(jnp.float32)
+        nll = (lse - picked) * mask
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mask)), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h, y))
+    return total / jnp.maximum(count, 1.0)
+
+
+def train_loss(cfg, params, batch):
+    hidden, labels, _, aux = forward_full(cfg, params, batch, collect=False)
+    return loss_from_hidden(cfg, params, hidden, labels) + AUX_WEIGHT * aux
+
+
+# ------------------------------------------------------------- serving
+def _kv_cache_from(cfg, kvs, max_len):
+    """Stacked per-layer (k, v) of shape (L..., B, Hkv, S, hd) -> padded
+    cache buffers of length max_len."""
+    k, v = kvs
+
+    def pad(t):
+        pad_widths = [(0, 0)] * t.ndim
+        pad_widths[-2] = (0, max_len - t.shape[-2])
+        return jnp.pad(t, pad_widths)
+    return pad(k), pad(v)
+
+
+def init_decode_cache(cfg, batch_size: int, max_len: int,
+                      enc_len: int = 0) -> Any:
+    """Zero caches for decode-only lowering (serve_step dry-runs)."""
+    dt = cfg.param_dtype
+    b = batch_size
+    hkv, hd = cfg.n_kv_heads, cfg.d_head
+    L = cfg.n_layers
+    if cfg.family == "dense" or (cfg.family == "moe" and not cfg.mla):
+        if cfg.layer_pattern == "local_global":
+            shape = (L // 2, 2, b, hkv, max_len, hd)
+        else:
+            shape = (L, b, hkv, max_len, hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.family == "moe" and cfg.mla:
+        nd, nm = cfg.first_k_dense, L - cfg.first_k_dense
+        return {
+            "dense_ckv": jnp.zeros((nd, b, max_len, cfg.kv_lora_rank), dt),
+            "dense_krope": jnp.zeros((nd, b, max_len, cfg.qk_rope_dim), dt),
+            "ckv": jnp.zeros((nm, b, max_len, cfg.kv_lora_rank), dt),
+            "krope": jnp.zeros((nm, b, max_len, cfg.qk_rope_dim), dt),
+        }
+    if cfg.family == "ssm":
+        h = cfg.n_heads
+        dk = cfg.d_model // h
+        return (jnp.zeros((L, b, cfg.d_model), dt),
+                jnp.zeros((L, b, h, dk, dk), jnp.float32),
+                jnp.zeros((L, b, cfg.d_model), dt))
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        np_ = cfg.n_layers // period
+        tail = cfg.n_layers - np_ * period
+        h, pd, n = cfg.n_heads, cfg.d_inner // cfg.n_heads, cfg.ssm_state
+        convdim = cfg.d_inner + 2 * n
+        cache = {
+            "mamba": (jnp.zeros((np_, period, b, h, pd, n), jnp.float32),
+                      jnp.zeros((np_, period, b, cfg.conv_kernel - 1,
+                                 convdim), dt)),
+            "k": jnp.zeros((np_, b, hkv, max_len, hd), dt),
+            "v": jnp.zeros((np_, b, hkv, max_len, hd), dt),
+            "tail": (jnp.zeros((tail, b, h, pd, n), jnp.float32),
+                     jnp.zeros((tail, b, cfg.conv_kernel - 1, convdim), dt))
+            if tail else None,
+        }
+        return cache
+    if cfg.family == "encdec":
+        Ld = cfg.dec_layers
+        return {
+            "k": jnp.zeros((Ld, b, hkv, max_len, hd), dt),
+            "v": jnp.zeros((Ld, b, hkv, max_len, hd), dt),
+            "xk": jnp.zeros((Ld, b, hkv, enc_len, hd), dt),
+            "xv": jnp.zeros((Ld, b, hkv, enc_len, hd), dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg, params, batch, max_len: int):
+    """Run the full prompt, return (last_logits (B,V), cache)."""
+    hidden, _, caches, _ = forward_full(cfg, params, batch, collect=True)
+    last = hidden[:, -1:]
+    logits = unembed_chunk(cfg, params, last)[:, 0]
+    if cfg.family in ("dense", "moe") and not cfg.mla:
+        k, v = _kv_cache_from(cfg, caches, max_len)
+        return logits, {"k": k, "v": v}
+    if cfg.family == "ssm":
+        return logits, caches
+    if cfg.family == "hybrid":
+        mcaches, kvs, tcaches = caches
+        k, v = _kv_cache_from(cfg, kvs, max_len)
+        return logits, {"mamba": mcaches, "k": k, "v": v, "tail": tcaches}
+    if cfg.family == "encdec":
+        (dec_caches, memory) = caches
+        kv, xkv = dec_caches
+        k, v = _kv_cache_from(cfg, kv, max_len)
+        return logits, {"k": k, "v": v, "xk": xkv[0], "xv": xkv[1]}
+    if cfg.mla:
+        def pad_seq(t):                       # (L,B,S,r) -> (L,B,max_len,r)
+            widths = [(0, 0)] * t.ndim
+            widths[-2] = (0, max_len - t.shape[-2])
+            return jnp.pad(t, widths)
+        out = {"ckv": pad_seq(caches["moe"][0]),
+               "krope": pad_seq(caches["moe"][1])}
+        if "dense" in caches:
+            out["dense_ckv"] = pad_seq(caches["dense"][0])
+            out["dense_krope"] = pad_seq(caches["dense"][1])
+        return logits, out
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg, params, cache, tokens, cur_len):
+    """tokens: (B,) int32 new token ids; cur_len: traced scalar (number of
+    tokens already in the cache). Returns (logits (B,V), new cache)."""
+    x = embed(cfg, params, tokens[:, None])
+    if cfg.family == "encdec":
+        x, cache = run_encdec_decode(cfg, params, x, cache, cur_len)
+    elif cfg.family == "dense" or (cfg.family == "moe" and not cfg.mla):
+        x, kc, vc = run_dense_decode(
+            cfg, params["blocks"], x, cache["k"], cache["v"], cur_len,
+            ffn="moe" if cfg.family == "moe" else "mlp")
+        cache = {"k": kc, "v": vc}
+    elif cfg.family == "moe" and cfg.mla:
+        def body_d(x, inp):
+            p_l, ckv, kr = inp
+            x, ckv, kr = B.mla_layer_decode(cfg, p_l, x, ckv, kr, cur_len,
+                                            ffn="mlp")
+            return x, (ckv, kr)
+        if "dense_blocks" in params:
+            x, (dckv, dkr) = seg_scan(
+                cfg, body_d, x, (params["dense_blocks"], cache["dense_ckv"],
+                                 cache["dense_krope"]))
+        else:
+            dckv, dkr = cache["dense_ckv"], cache["dense_krope"]
+
+        def body_m(x, inp):
+            p_l, ckv, kr = inp
+            x, ckv, kr = B.mla_layer_decode(cfg, p_l, x, ckv, kr, cur_len,
+                                            ffn="moe")
+            return x, (ckv, kr)
+        x, (ckv, kr) = seg_scan(
+            cfg, body_m, x, (params["blocks"], cache["ckv"], cache["krope"]))
+        cache = {"dense_ckv": dckv, "dense_krope": dkr,
+                 "ckv": ckv, "krope": kr}
+    elif cfg.family == "ssm":
+        x = apply_norm(cfg, x, params.get("ln0"))
+        x, cache = run_ssm_decode(cfg, params["blocks"], x, cache)
+    elif cfg.family == "hybrid":
+        x, cache = run_hybrid_decode(cfg, params, x, cache, cur_len)
+    else:
+        raise ValueError(cfg.family)
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    logits = unembed_chunk(cfg, params, x)[:, 0]
+    return logits, cache

@@ -1,0 +1,208 @@
+"""Mixture-of-Experts FFN: capacity-bounded top-k routing.
+
+Two dispatch implementations:
+
+* ``gather`` (default, production): build an (E, C) token-index table by
+  scatter, gather tokens into expert-major layout, run the batched expert
+  FFN, scatter-add back. Memory is O(E*C*d) — never materializes the
+  (T, E, C) one-hot. Under EP (expert dim sharded over "model") the
+  gather/scatter lower to all-to-all-style collectives.
+
+* ``einsum`` (reference): the classic GShard one-hot formulation. O(T*E*C)
+  memory — used only as a small-shape oracle to cross-validate ``gather``
+  (tests/test_moe.py). This was the original baseline; see EXPERIMENTS.md
+  §Perf for the measured blow-up that motivated the switch.
+
+FLOPs are proportional to expert capacity in both, matching real MoE cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn
+
+
+def router_topk(logits: jnp.ndarray, k: int, renormalize: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """logits (T, E) -> (weights (T,K), idx (T,K))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    if renormalize:
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def load_balance_loss(logits: jnp.ndarray, idx: jnp.ndarray,
+                      n_experts: int) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)                       # (E,)
+    one_hot = jax.nn.one_hot(idx[:, 0], n_experts)     # top-1 fraction
+    fe = jnp.mean(one_hot, axis=0)
+    return n_experts * jnp.sum(fe * me)
+
+
+def _exclusive_cumsum_rows(cfg, flat: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive cumsum over axis 0 of (N, E).
+
+    cfg.router_blocked_cumsum=True uses the two-level (blocked) scan:
+    within-block cumsum + cumsum of block totals. XLA's cost model (and a
+    naive TPU lowering) treats a length-N scan as O(N^2) reduce-window —
+    at N = T*K ~ 8.4M the flat scan dominated olmoe's entire compute term
+    (EXPERIMENTS.md §Perf iteration A1); the blocked form is O(N*blk).
+    """
+    if not cfg.router_blocked_cumsum:
+        return jnp.cumsum(flat, axis=0) - flat
+    n, e = flat.shape
+    blk = min(2048, n)
+    while n % blk:
+        blk -= 1
+    nb = n // blk
+    xb = flat.reshape(nb, blk, e)
+    within = jnp.cumsum(xb, axis=1)                # (nb, blk, E)
+    totals = within[:, -1]                         # (nb, E)
+    offsets = jnp.cumsum(totals, axis=0) - totals  # exclusive block offs
+    return (within - xb + offsets[:, None]).reshape(n, e)
+
+
+def _route(cfg, xt, router):
+    """Shared routing prologue: (weights, idx, pos, capacity, aux)."""
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", xt, router,
+                        preferred_element_type=jnp.float32)
+    weights, idx = router_topk(logits, k)
+    aux = load_balance_loss(logits, idx, e)
+    capacity = int(max(k * t // e * cfg.capacity_factor, 4))
+    capacity = min(capacity, t)
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)         # (T,K,E)
+    flat = onehot.reshape(t * k, e)
+    pos = _exclusive_cumsum_rows(cfg, flat)                   # (T*K, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, k)          # (T,K)
+    keep = pos < capacity
+    weights = weights * keep.astype(weights.dtype)
+    return weights, idx, pos, keep, capacity, aux
+
+
+def _expert_ffn(cfg, p, xe):
+    """xe: (E, C, d) -> (E, C, d)."""
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    return jnp.einsum("ecf,efd->ecd", h, p["wd"])
+
+
+def _shared_ffn(cfg, p, xt):
+    act = act_fn(cfg.act)
+    hs = act(jnp.einsum("td,df->tf", xt, p["sg"])) \
+        * jnp.einsum("td,df->tf", xt, p["su"])
+    return jnp.einsum("tf,fd->td", hs, p["sd"])
+
+
+def _ep_hint(x, spec_builder):
+    """Apply an EP sharding constraint if a mesh is active (§Perf A3)."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    try:
+        mesh = _jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            return x
+        spec = spec_builder(P, mesh)
+        if spec is None:
+            return x
+        return _jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, KeyError, TypeError):
+        return x
+
+
+def moe_ffn_gather(cfg, p, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+    if cfg.moe_shard_hints:
+        # keep tokens data-sharded through routing so XLA moves only the
+        # (E, C, d) dispatch payload across the EP axis, not all of xt
+        def tok_spec(P, mesh):
+            dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+            dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+            if dp is None or t % mesh.shape["data"]:
+                return None
+            return P(dp, None)
+        xt = _ep_hint(xt, tok_spec)
+    weights, idx, pos, keep, capacity, aux = _route(cfg, xt, p["router"])
+
+    # (E, C) index table: which token fills expert e's slot c (t if kept)
+    tok_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+    flat_e = idx.reshape(-1)
+    flat_c = pos.reshape(-1)
+    flat_tok = tok_ids.reshape(-1)
+    flat_w = (weights * keep.astype(weights.dtype)).reshape(-1)
+    flat_keep = keep.reshape(-1)
+    # dropped slots scatter to a trash row (index E) sliced off afterwards
+    e_idx = jnp.where(flat_keep, flat_e, e)
+    c_idx = jnp.where(flat_keep, flat_c, 0)
+    table = jnp.zeros((e + 1, capacity), jnp.int32)
+    table = table.at[e_idx, c_idx].set(flat_tok, mode="drop")[:e]
+    filled = jnp.zeros((e + 1, capacity), jnp.bool_)
+    filled = filled.at[e_idx, c_idx].set(True, mode="drop")[:e]
+    wtab = jnp.zeros((e + 1, capacity), jnp.float32)
+    wtab = wtab.at[e_idx, c_idx].set(flat_w, mode="drop")[:e]
+
+    xe = xt[table] * filled[..., None].astype(xt.dtype)       # (E,C,d)
+    if cfg.moe_shard_hints:
+        def ed_spec(P, mesh):
+            if getattr(cfg, "moe_ep_data", False):
+                if e % mesh.shape["data"] or d % mesh.shape["model"]:
+                    return None
+                return P("data", None, "model")   # match weight layout
+            if e % mesh.shape["model"]:
+                return None
+            return P("model", None, None)
+        xe = _ep_hint(xe, ed_spec)
+    ye = _expert_ffn(cfg, p, xe)
+    if cfg.moe_shard_hints:
+        ye = _ep_hint(ye, ed_spec)
+    ye = ye * wtab[..., None].astype(ye.dtype)
+    y = jnp.zeros((t, d), ye.dtype).at[table.reshape(-1)].add(
+        ye.reshape(-1, d))
+
+    if "sg" in p:
+        y = y + _shared_ffn(cfg, p, xt)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def moe_ffn_einsum(cfg, p, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference GShard one-hot formulation (small shapes only)."""
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.n_experts
+    xt = x.reshape(t, d)
+    weights, idx, pos, keep, capacity, aux = _route(cfg, xt, p["router"])
+
+    disp = (jax.nn.one_hot(idx, e, dtype=xt.dtype)[..., None]
+            * jax.nn.one_hot(pos, capacity, dtype=xt.dtype)[..., None, :]
+            * keep[..., None, None].astype(xt.dtype))
+    disp_tec = jnp.sum(disp, axis=1)                          # (T,E,C)
+    comb_tec = jnp.sum(disp * weights[..., None, None].astype(xt.dtype),
+                       axis=1)
+
+    xe = jnp.einsum("tec,td->ecd", disp_tec, xt)              # (E,C,d)
+    ye = _expert_ffn(cfg, p, xe)
+    y = jnp.einsum("tec,ecd->td", comb_tec, ye)
+
+    if "sg" in p:
+        y = y + _shared_ffn(cfg, p, xt)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def moe_ffn(cfg, p, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if getattr(cfg, "moe_impl", "gather") == "einsum":
+        return moe_ffn_einsum(cfg, p, x)
+    return moe_ffn_gather(cfg, p, x)

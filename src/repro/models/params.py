@@ -1,0 +1,326 @@
+"""Parameter pytree construction (+ counting) for every arch family.
+
+Layout: params are nested dicts of stacked arrays — leading axis = layer
+index within a *segment*. A model is a list of segments (see blocks.py):
+e.g. deepseek-v2 = [1 dense-FFN MLA layer] + [59 MoE MLA layers]; gemma2 =
+[13 (local, global) pairs]; zamba2 = [6 periods of 6 mamba layers] +
+[2 tail layers] + one *shared* attention block (unstacked).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import KeyGen, dense_init, embed_init
+from .config import ModelConfig
+
+
+def _maybe_norm(cfg, kg, shape_d, init=jnp.zeros):
+    """Norm weight or None for non-parametric LN (olmo)."""
+    if cfg.norm == "nonparam":
+        return None
+    if cfg.name.startswith("gemma"):
+        return jnp.zeros((shape_d,), cfg.param_dtype)      # (1+w) form
+    return jnp.ones((shape_d,), cfg.param_dtype)
+
+
+def _stack(leaves: List[Any]):
+    """Stack a list of per-layer pytrees along a new leading axis."""
+    if any(l is None for l in leaves[0].values() if not isinstance(l, dict)):
+        pass
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *leaves)
+
+
+# ------------------------------------------------------------ per-layer init
+def init_attn_layer(cfg, kg: KeyGen) -> Dict[str, Any]:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.param_dtype
+    p = {
+        "wq": dense_init(kg(), (d, hq * hd), dt),
+        "wk": dense_init(kg(), (d, hkv * hd), dt),
+        "wv": dense_init(kg(), (d, hkv * hd), dt),
+        "wo": dense_init(kg(), (hq * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    n = _maybe_norm(cfg, kg, d)
+    if n is not None:
+        p["ln1"] = n
+    if cfg.post_norms:
+        pn = _maybe_norm(cfg, kg, d)
+        if pn is not None:
+            p["post_ln1"] = pn
+    return p
+
+
+def init_mla_layer(cfg, kg: KeyGen) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.param_dtype
+    dqk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "q_a": dense_init(kg(), (d, cfg.q_lora_rank), dt),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), dt),
+        "q_b": dense_init(kg(), (cfg.q_lora_rank, h * dqk), dt),
+        "kv_a": dense_init(kg(), (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dt),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), dt),
+        "kv_b": dense_init(
+            kg(), (cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+            dt),
+        "o": dense_init(kg(), (h * cfg.v_head_dim, d), dt),
+        "ln1": jnp.ones((d,), dt),
+    }
+    return p
+
+
+def init_mlp_layer(cfg, kg: KeyGen, d_ff: Optional[int] = None
+                   ) -> Dict[str, Any]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    p = {
+        "wg": dense_init(kg(), (d, ff), dt),
+        "wu": dense_init(kg(), (d, ff), dt),
+        "wd": dense_init(kg(), (ff, d), dt),
+    }
+    n = _maybe_norm(cfg, kg, d)
+    if n is not None:
+        p["ln2"] = n
+    if cfg.post_norms:
+        pn = _maybe_norm(cfg, kg, d)
+        if pn is not None:
+            p["post_ln2"] = pn
+    return p
+
+
+def init_moe_layer(cfg, kg: KeyGen) -> Dict[str, Any]:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_expert
+    dt = cfg.param_dtype
+    p = {
+        "router": dense_init(kg(), (d, e), jnp.float32),
+        "wg": dense_init(kg(), (e, d, fe), dt, in_axis=-2),
+        "wu": dense_init(kg(), (e, d, fe), dt, in_axis=-2),
+        "wd": dense_init(kg(), (e, fe, d), dt, in_axis=-2),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        p["sg"] = dense_init(kg(), (d, fs), dt)
+        p["su"] = dense_init(kg(), (d, fs), dt)
+        p["sd"] = dense_init(kg(), (fs, d), dt)
+    n = _maybe_norm(cfg, kg, d)
+    if n is not None:
+        p["ln2"] = n
+    return p
+
+
+def init_rwkv_layer(cfg, kg: KeyGen) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    dk = d // h
+    dt = cfg.param_dtype
+    lora = 64
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "mix_A": dense_init(kg(), (d, lora * 5), dt),
+        "decay_A": dense_init(kg(), (d, lora), dt),
+        "decay_B": dense_init(kg(), (lora, d), dt),
+        "decay_base": jnp.zeros((d,), jnp.float32) - 0.6,
+        "u": (jax.random.normal(kg(), (h, dk), jnp.float32) * 0.3),
+        "wr": dense_init(kg(), (d, d), dt),
+        "wk": dense_init(kg(), (d, d), dt),
+        "wv": dense_init(kg(), (d, d), dt),
+        "wg": dense_init(kg(), (d, d), dt),
+        "wo": dense_init(kg(), (d, d), dt),
+        "ln_x": jnp.ones((d,), dt),
+        "cmix_k": jnp.full((d,), 0.5, dt),
+        "cmix_r": jnp.full((d,), 0.5, dt),
+        "ck": dense_init(kg(), (d, cfg.d_ff), dt),
+        "cv": dense_init(kg(), (cfg.d_ff, d), dt),
+        "cr": dense_init(kg(), (d, d), dt),
+    }
+    for nm in ("r", "k", "v", "g", "w"):
+        p[f"mix_{nm}"] = jnp.full((d,), 0.5, dt)
+        p[f"mix_B_{nm}"] = dense_init(kg(), (lora, d), dt)
+    # mix_A produces 5*lora; split per use in apply. Simplify: one shared A.
+    p["mix_A"] = dense_init(kg(), (d, lora), dt)
+    return p
+
+
+def init_mamba_layer(cfg, kg: KeyGen) -> Dict[str, Any]:
+    d, h, di, n = cfg.d_model, cfg.n_heads, cfg.d_inner, cfg.ssm_state
+    dt = cfg.param_dtype
+    conv_dim = di + 2 * n
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "in_zx": dense_init(kg(), (d, 2 * di), dt),
+        "in_bcdt": dense_init(kg(), (d, 2 * n + h), dt),
+        "conv_w": dense_init(kg(), (cfg.conv_kernel, conv_dim), dt,
+                             in_axis=0),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(kg(), (di, d), dt),
+    }
+    return p
+
+
+def init_cross_attn_layer(cfg, kg: KeyGen) -> Dict[str, Any]:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.param_dtype
+    return {
+        "xwq": dense_init(kg(), (d, hq * hd), dt),
+        "xwk": dense_init(kg(), (d, hkv * hd), dt),
+        "xwv": dense_init(kg(), (d, hkv * hd), dt),
+        "xwo": dense_init(kg(), (hq * hd, d), dt),
+        "xln": jnp.ones((d,), dt),
+    }
+
+
+# -------------------------------------------------------------- full models
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    dt = cfg.param_dtype
+    params: Dict[str, Any] = {
+        "embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dt),
+    }
+    fn = _maybe_norm(cfg, kg, cfg.d_model)
+    if fn is not None:
+        params["final_norm"] = fn
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kg(), (cfg.d_model, cfg.vocab), dt)
+    if cfg.frontend == "vision":
+        params["mm_proj"] = dense_init(kg(), (1024, cfg.d_model), dt)
+
+    def dense_block():
+        return {**init_attn_layer(cfg, kg), **init_mlp_layer(cfg, kg)}
+
+    def moe_block():
+        return {**init_attn_layer(cfg, kg), **init_moe_layer(cfg, kg)}
+
+    if cfg.family == "dense":
+        if cfg.layer_pattern == "local_global":
+            pairs = [
+                {"local": dense_block(), "global": dense_block()}
+                for _ in range(cfg.n_layers // 2)]
+            params["blocks"] = _stack(pairs)
+        else:
+            params["blocks"] = _stack(
+                [dense_block() for _ in range(cfg.n_layers)])
+    elif cfg.family == "moe":
+        if cfg.mla:
+            def mla_moe():
+                return {**init_mla_layer(cfg, kg), **init_moe_layer(cfg, kg)}
+
+            def mla_dense():
+                # HF deepseek-v2: dense first layer uses intermediate 12288
+                return {**init_mla_layer(cfg, kg),
+                        **init_mlp_layer(cfg, kg, d_ff=12288)}
+            if cfg.first_k_dense:
+                params["dense_blocks"] = _stack(
+                    [mla_dense() for _ in range(cfg.first_k_dense)])
+            params["blocks"] = _stack(
+                [mla_moe()
+                 for _ in range(cfg.n_layers - cfg.first_k_dense)])
+        else:
+            params["blocks"] = _stack(
+                [moe_block() for _ in range(cfg.n_layers)])
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack(
+            [init_rwkv_layer(cfg, kg) for _ in range(cfg.n_layers)])
+        params["ln0"] = jnp.ones((cfg.d_model,), dt)
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        n_periods = cfg.n_layers // period
+        tail = cfg.n_layers - n_periods * period
+        periods = [
+            _stack([init_mamba_layer(cfg, kg) for _ in range(period)])
+            for _ in range(n_periods)]
+        params["blocks"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, 0), *periods)
+        if tail:
+            params["tail_blocks"] = _stack(
+                [init_mamba_layer(cfg, kg) for _ in range(tail)])
+        params["shared_attn"] = dense_block()
+    elif cfg.family == "encdec":
+        def enc_block():
+            return {**init_attn_layer(cfg, kg), **init_mlp_layer(cfg, kg)}
+
+        def dec_block():
+            return {**init_attn_layer(cfg, kg),
+                    **init_cross_attn_layer(cfg, kg),
+                    **init_mlp_layer(cfg, kg)}
+        params["enc_blocks"] = _stack(
+            [enc_block() for _ in range(cfg.enc_layers)])
+        params["dec_blocks"] = _stack(
+            [dec_block() for _ in range(cfg.dec_layers)])
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dt)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ----------------------------------------------------------------- counting
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def count_params_config(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Analytic parameter count (no allocation).
+
+    active_only: MoE layers count top_k routed + shared experts only
+    (for MODEL_FLOPS = 6 * N_active * D).
+    """
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    attn = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+    if cfg.qkv_bias:
+        attn += hq * hd + 2 * hkv * hd
+    mlp = 3 * d * cfg.d_ff
+    if cfg.mla:
+        dqk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        attn = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * dqk
+                + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                + cfg.kv_lora_rank * cfg.n_heads
+                * (cfg.qk_nope_dim + cfg.v_head_dim)
+                + cfg.n_heads * cfg.v_head_dim * d)
+    if cfg.family in ("dense",):
+        body = cfg.n_layers * (attn + mlp)
+    elif cfg.family == "moe":
+        n_routed = cfg.top_k if active_only else cfg.n_experts
+        moe = (d * cfg.n_experts
+               + n_routed * 3 * d * cfg.d_expert
+               + cfg.n_shared_experts * 3 * d * cfg.d_expert)
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        dense_ff = 12288 if cfg.mla else cfg.d_ff
+        body = (n_moe * (attn + moe)
+                + cfg.first_k_dense * (attn + 3 * d * dense_ff))
+    elif cfg.family == "ssm":
+        lora = 64
+        tm = (5 * d * lora + lora * 5 * d + d * lora + lora * d
+              + 5 * d * d + 2 * d)
+        cm = 2 * d * cfg.d_ff + d * d
+        body = cfg.n_layers * (tm + cm)
+    elif cfg.family == "hybrid":
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_heads
+        zxbcdt = 2 * di + 2 * n + h
+        mamba = (d * zxbcdt + cfg.conv_kernel * (di + 2 * n)
+                 + di * d + di)
+        body = cfg.n_layers * mamba + (attn + mlp)   # one shared attn block
+    elif cfg.family == "encdec":
+        xattn = 2 * (d * hq * hd) + 2 * (d * hkv * hd)
+        body = (cfg.enc_layers * (attn + mlp)
+                + cfg.dec_layers * (attn + xattn + mlp))
+    else:
+        raise ValueError(cfg.family)
+    emb = cfg.vocab * d
+    if not cfg.tie_embeddings:
+        emb *= 2
+    return int(body + emb)

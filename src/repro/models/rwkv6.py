@@ -1,0 +1,165 @@
+"""RWKV-6 "Finch" time-mix and channel-mix (arXiv:2404.05892).
+
+Recurrence per head (r,k in R^dk, v in R^dv, data-dependent decay
+w_t in (0,1)^dk, bonus u in R^dk):
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+The chunked parallel form (used for train/prefill) computes, per chunk of
+length C with exclusive log-decay prefix L_t = sum_{u<t} log w_u:
+
+    inter: o_t += (r_t * exp(L_t)) @ S_in
+    intra: o_t += sum_{s<t} [(r_t*exp(L_t)) . (k_s*exp(-L_{s+1}))] v_s
+                  + (r_t . (u*k_t)) v_t
+    state: S_out = exp(L_C) * S_in + sum_s (k_s * exp(L_C - L_{s+1})) v_s^T
+
+computed in fp32 with chunk size <= 16 for stability (standard practice).
+Decode is the plain O(1)-per-token recurrence — this is why rwkv6 runs the
+long_500k cell that full-attention models skip.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn
+
+
+def _lora_mix(x, xprev, mix, A, B):
+    """RWKV6 data-dependent token-shift interpolation (ddlerp)."""
+    delta = xprev - x
+    base = x + delta * mix
+    boost = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, A))
+    return x + delta * (mix + jnp.einsum("bsr,rd->bsd", boost, B))
+
+
+def _decay(base_w, xw):
+    """log-decay: logw = -exp(w0 + xw), guaranteed < 0.
+
+    Clamped to [-4.25, -1e-6]: the chunked form factorizes the pairwise
+    decay e^{L_t - L_s} into e^{L_t} * e^{-L_s}, so each factor must stay
+    inside fp32 range: |logw|*chunk <= 4.25*16 = 68 < log(3.4e38)~88.
+    A decay of e^-4.25 ~ 0.014 zeroes the state in one step anyway, so the
+    clamp is semantically negligible (and identical in the decode path).
+    """
+    return jnp.clip(-jnp.exp(base_w + xw), -4.25, -1e-6)
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 16):
+    """Chunked WKV scan.
+
+    r,k,logw: (B,H,S,dk); v: (B,H,S,dv); u: (H,dk);
+    state: (B,H,dk,dv) fp32. Returns (o (B,H,S,dv), state_out).
+    """
+    b, h, s, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+    rf = r.astype(jnp.float32).reshape(b, h, n, c, dk).transpose(2, 0, 1, 3, 4)
+    kf = k.astype(jnp.float32).reshape(b, h, n, c, dk).transpose(2, 0, 1, 3, 4)
+    vf = v.astype(jnp.float32).reshape(b, h, n, c, dv).transpose(2, 0, 1, 3, 4)
+    lw = logw.astype(jnp.float32).reshape(b, h, n, c, dk).transpose(2, 0, 1, 3, 4)
+    uf = u.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)       # strict lower
+
+    def per_chunk(S, inp):
+        rc, kc, vc, lwc = inp                                  # (B,H,C,*)
+        Lx = jnp.cumsum(lwc, axis=2)                           # inclusive
+        Lex = Lx - lwc                                         # exclusive
+        r_dec = rc * jnp.exp(Lex)                              # r_t e^{L_t}
+        k_inc = kc * jnp.exp(-Lx)                              # k_s e^{-L_{s+1}}
+        # inter-chunk
+        o = jnp.einsum("bhck,bhkv->bhcv", r_dec, S)
+        # intra-chunk (strictly lower triangular)
+        att = jnp.einsum("bhck,bhsk->bhcs", r_dec, k_inc) * tri[None, None]
+        o = o + jnp.einsum("bhcs,bhsv->bhcv", att, vc)
+        # current-token bonus
+        o = o + jnp.einsum("bhck,bhcv->bhcv",
+                           rc * uf[None, :, None, :] * kc, vc)
+        # state update
+        Ltot = Lx[:, :, -1:, :]                                # (B,H,1,dk)
+        S = S * jnp.exp(Ltot[:, :, 0, :, None]) + jnp.einsum(
+            "bhsk,bhsv->bhkv", kc * jnp.exp(Ltot - Lx), vc)
+        return S, o
+
+    state_out, o = jax.lax.scan(per_chunk, state.astype(jnp.float32),
+                                (rf, kf, vf, lw))
+    o = o.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dv)
+    return o.astype(r.dtype), state_out
+
+
+def wkv_decode(r, k, v, logw, u, state):
+    """One-token recurrence. r,k,logw:(B,H,dk); v:(B,H,dv);
+    state (B,H,dk,dv) fp32 -> (o (B,H,dv), state)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    kv = kf[..., :, None] * vf[..., None, :]                  # (B,H,dk,dv)
+    o = jnp.einsum("bhk,bhkv->bhv",
+                   rf, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = state * w[..., :, None] + kv
+    return o.astype(r.dtype), state
+
+
+def time_mix(cfg, p, x, xprev, state, *, decode: bool = False,
+             chunk: int = 16):
+    """RWKV6 attention replacement.
+
+    x: (B,S,d) (S=1 when decode); xprev: (B,d) last token of prev step;
+    state: (B,H,dk,dv) fp32. Returns (out, new_xprev, new_state).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dk = d // h
+    shifted = jnp.concatenate([xprev[:, None], x[:, :-1]], axis=1)
+
+    def mixed(name):
+        return _lora_mix(x, shifted, p[f"mix_{name}"],
+                         p["mix_A"], p[f"mix_B_{name}"])
+
+    r = jnp.einsum("bsd,de->bse", mixed("r"), p["wr"])
+    k = jnp.einsum("bsd,de->bse", mixed("k"), p["wk"])
+    v = jnp.einsum("bsd,de->bse", mixed("v"), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mixed("g"), p["wg"]))
+    xw = jnp.einsum("bsd,dr->bsr", mixed("w"), p["decay_A"])
+    xw = jnp.einsum("bsr,rd->bsd", jnp.tanh(xw), p["decay_B"])
+    logw = _decay(p["decay_base"][None, None], xw)            # (B,S,d)
+
+    def heads(t):
+        return t.reshape(b, s, h, dk).transpose(0, 2, 1, 3)
+
+    rh, kh, vh, lwh = heads(r), heads(k), heads(v), heads(logw)
+    if decode:
+        o, state = wkv_decode(rh[:, :, 0], kh[:, :, 0], vh[:, :, 0],
+                              lwh[:, :, 0], p["u"], state)
+        o = o[:, :, None, :]
+    else:
+        o, state = wkv_chunked(rh, kh, vh, lwh, p["u"], state, chunk=chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    # per-head group norm then output gate
+    o = o.reshape(b, s, h, dk)
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o.astype(jnp.float32), axis=-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).astype(x.dtype)
+    o = o.reshape(b, s, d) * p["ln_x"][None, None]
+    out = jnp.einsum("bsd,de->bse", o * g, p["wo"])
+    return out.astype(x.dtype), x[:, -1], state
+
+
+def channel_mix(cfg, p, x, xprev):
+    """RWKV6 FFN: token-shift + squared-relu MLP with receptance gate."""
+    b, s, d = x.shape
+    shifted = jnp.concatenate([xprev[:, None], x[:, :-1]], axis=1)
+    delta = shifted - x
+    xk = x + delta * p["cmix_k"]
+    xr = x + delta * p["cmix_r"]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ck"])
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"]))
+    return (rr * vv).astype(x.dtype), x[:, -1]

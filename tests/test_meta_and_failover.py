@@ -1,0 +1,126 @@
+"""Meta server, DCCache, MRStore flush and failure handling (§4.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core import DCTMeta, WorkRequest, make_cluster
+from repro.core.meta import DrTMKV, KVClient
+
+
+def test_drtmkv_put_parse_roundtrip():
+    cluster = make_cluster(n_nodes=1, n_meta=1)
+    kv = cluster.meta_servers[0].kv
+    kv.put(b"alpha", b"12_bytes_val")
+    kv.put(b"beta", b"x")
+    # local parse path
+    from repro.core.meta import fnv1a
+    raw = cluster.meta_servers[0].node.read_bytes(
+        kv.addr, kv.slot_of(b"alpha") * 48 if False else 0, 0)
+    # use a one-sided client lookup instead (the real path)
+    m0 = cluster.module("n0")
+
+    def scenario():
+        client = m0._meta_clients[0]
+        v = yield from client.lookup(b"alpha")
+        assert v[:12] == b"12_bytes_val"
+        v = yield from client.lookup(b"beta")
+        assert v[:1] == b"x"
+        v = yield from client.lookup(b"missing")
+        assert v is None
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_qconnect_uses_dccache_after_first_contact():
+    cluster = make_cluster(n_nodes=3, n_meta=1)
+    m0 = cluster.module("n0")
+
+    def scenario():
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        misses0 = m0.dccache.misses
+        qd2 = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd2, "n1")
+        assert m0.dccache.misses == misses0      # cached now
+        assert m0.dccache.hits >= 1
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_meta_server_failover():
+    cluster = make_cluster(n_nodes=2, n_meta=2)
+    m0 = cluster.module("n0")
+
+    def scenario():
+        # kill the first meta server AFTER boot
+        cluster.fabric.node("meta0").alive = False
+        qd = yield from m0.sys_queue()
+        rc = yield from m0.sys_qconnect(qd, "n1")
+        assert rc == 0                        # served by meta1
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_all_meta_dead_falls_back_to_rpc():
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    m0 = cluster.module("n0")
+
+    def scenario():
+        cluster.fabric.node("meta0").alive = False
+        qd = yield from m0.sys_queue()
+        rc = yield from m0.sys_qconnect(qd, "n1")
+        assert rc == 0                        # §4.2 RPC fallback
+        vq = m0.vqs[qd]
+        assert vq.dct_meta is not None
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_mrstore_periodic_flush_and_deferred_release():
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    env = cluster.env
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+
+        def read_once(wid):
+            rc = yield from m0.sys_qpush(qd, [WorkRequest(
+                op="READ", wr_id=wid, local_mr=mr, local_off=0,
+                remote_rkey=mr_srv.rkey, remote_off=0, nbytes=8)])
+            assert rc == 0
+            ent = yield from m0.qpop_block(qd)
+            return ent
+
+        yield from read_once(1)
+        misses = m0.mrstore.misses
+        yield from read_once(2)
+        assert m0.mrstore.misses == misses       # cached
+        # deregistration: ValidMR removed instantly, release deferred one
+        # flush period so stale caches can't outlive it (§4.2)
+        t0 = env.now
+        yield from m1.sys_qdereg_mr(mr_srv)
+        assert env.now - t0 >= m1.cm.mr_flush_period_us
+        # our cache has been flushed by then -> recheck fails cleanly
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="READ", wr_id=3, local_mr=mr, local_off=0,
+            remote_rkey=mr_srv.rkey, remote_off=0, nbytes=8)])
+        assert rc == -1
+        return True
+
+    assert env.run_process(scenario(), "s")
+
+
+def test_meta_memory_footprint_claim():
+    """§3.1: one meta server for a 10k cluster needs ~117KB of metadata."""
+    cluster = make_cluster(n_nodes=4, n_meta=1)
+    ms = cluster.meta_servers[0]
+    per_node = ms.memory_bytes() / len(cluster.modules)
+    assert per_node * 10_000 < 250_000       # low hundreds of KB

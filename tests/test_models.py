@@ -1,0 +1,170 @@
+"""Per-architecture smoke + the strongest functional check we have:
+prefill->decode consistency (step-by-step decode logits must match the
+teacher-forced full forward at every position)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_archs, get_smoke_config
+from repro.models import (count_params, decode_step, forward_full,
+                          init_decode_cache, init_params, prefill,
+                          train_loss)
+from repro.models.model import unembed_chunk
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=64, with_labels=True, seed=3):
+    rng = np.random.RandomState(seed)
+    if cfg.family == "encdec":
+        batch = {"frames": jnp.asarray(
+                     rng.randn(b, 32, cfg.d_model), jnp.float32),
+                 "dec_tokens": jnp.asarray(
+                     rng.randint(0, cfg.vocab, (b, s)), jnp.int32)}
+        if with_labels:
+            batch["labels"] = batch["dec_tokens"]
+        return batch
+    if cfg.frontend == "vision":
+        text = s - cfg.n_frontend_tokens
+        batch = {"tokens": jnp.asarray(
+                     rng.randint(0, cfg.vocab, (b, text)), jnp.int32),
+                 "vision_embeds": jnp.asarray(
+                     rng.randn(b, cfg.n_frontend_tokens, 1024),
+                     jnp.float32)}
+        if with_labels:
+            batch["labels"] = batch["tokens"]
+        return batch
+    batch = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab, (b, s)), jnp.int32)}
+    if with_labels:
+        batch["labels"] = batch["tokens"]
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_train_step_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    loss = jax.jit(lambda p, b: train_loss(cfg, p, b))(params, batch)
+    assert jnp.isfinite(loss)
+    assert 1.0 < float(loss) < 15.0          # ~ln(vocab) at init
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_grads_finite_and_nonzero(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    grads = jax.jit(jax.grad(lambda p: train_loss(cfg, p, batch)))(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in leaves)
+    total = sum(float(jnp.sum(jnp.abs(l.astype(jnp.float32))))
+                for l in leaves)
+    assert total > 0.0
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_decode_step_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    cache = init_decode_cache(cfg, 2, 96, enc_len=32)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: decode_step(cfg, p, c, t, 5))(
+        params, cache, jnp.zeros((2,), jnp.int32))
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_prefill_decode_consistency(arch):
+    """decode(tokens one-by-one) must reproduce teacher-forced logits."""
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:
+        # capacity dropping is batch-size dependent by construction; a
+        # no-drop capacity makes prefill and decode routing identical
+        cfg = dataclasses.replace(cfg, capacity_factor=1000.0)
+    if cfg.mla:
+        # the absorbed decode reassociates the q/k matmuls; at the smoke
+        # config's toy ranks bf16 rounding amplifies through the softmax,
+        # so the algorithmic-equivalence check runs in f32 (verified to
+        # ~1e-6; the bf16 production ranks are far less sensitive)
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(cfg, KEY)
+    b, s = 1, 32
+    batch = make_batch(cfg, b=b, s=s, with_labels=False)
+    max_len = 64
+
+    # teacher-forced hidden states over the full sequence
+    hidden, _, _, _ = forward_full(cfg, params, batch, collect=False)
+    full_logits = unembed_chunk(cfg, params, hidden)        # (B,S,V)
+
+    # prefill on the prompt prefix, then decode token-by-token
+    cut = s // 2
+    if cfg.family == "encdec":
+        pre_batch = {"frames": batch["frames"],
+                     "dec_tokens": batch["dec_tokens"][:, :cut]}
+        rest = batch["dec_tokens"][:, cut:]
+    elif cfg.frontend == "vision":
+        pre_batch = {"tokens": batch["tokens"][:, :cut],
+                     "vision_embeds": batch["vision_embeds"]}
+        rest = batch["tokens"][:, cut:]
+    else:
+        pre_batch = {"tokens": batch["tokens"][:, :cut]}
+        rest = batch["tokens"][:, cut:]
+
+    logits0, cache = jax.jit(
+        lambda p, b: prefill(cfg, p, b, max_len))(params, pre_batch)
+    n_img = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    pos0 = cut + n_img                     # absolute position in sequence
+    np.testing.assert_allclose(
+        np.asarray(logits0, np.float32),
+        np.asarray(full_logits[:, pos0 - 1], np.float32),
+        atol=3e-2, rtol=3e-2)
+
+    # MLA decodes through the ABSORBED formulation (different matmul
+    # association than the naive train path) — slightly looser bf16 bars
+    tol = 8e-2 if cfg.mla else 3e-2
+    step = jax.jit(lambda p, c, t, l: decode_step(cfg, p, c, t, l))
+    cur = pos0
+    for t in range(rest.shape[1] - 1):
+        tok = rest[:, t]
+        logits, cache = step(params, cache, tok, jnp.asarray(cur))
+        ref = full_logits[:, pos0 + t]
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol,
+            err_msg=f"{arch} mismatch at decode step {t}")
+        cur += 1
+
+
+def test_param_counts_match_published():
+    from repro.configs import get_config
+    from repro.models import count_params_config
+    expect = {
+        "llava_next_mistral_7b": (7.0e9, 7.5e9),
+        "phi3_mini_3_8b": (3.7e9, 3.9e9),
+        "gemma2_2b": (2.4e9, 2.8e9),
+        "qwen2_0_5b": (0.45e9, 0.55e9),
+        "olmo_1b": (1.0e9, 1.3e9),
+        "rwkv6_7b": (7.0e9, 8.0e9),
+        "olmoe_1b_7b": (6.5e9, 7.2e9),
+        "deepseek_v2_236b": (230e9, 240e9),
+        "zamba2_1_2b": (0.9e9, 1.4e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params_config(get_config(arch))
+        assert lo <= n <= hi, (arch, n)
+    # active params: the MoEs
+    na = count_params_config(get_config("deepseek_v2_236b"),
+                             active_only=True)
+    assert 20e9 <= na <= 23e9
+    na = count_params_config(get_config("olmoe_1b_7b"), active_only=True)
+    assert 1.0e9 <= na <= 1.5e9

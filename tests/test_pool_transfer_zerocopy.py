@@ -1,0 +1,167 @@
+"""Hybrid pool promotion/demotion, DC<->RC transfer FIFO, zero-copy."""
+
+import numpy as np
+import pytest
+
+from repro.core import WorkRequest, make_cluster
+from repro.core.qp import QPState
+
+
+def test_background_promotion_to_rc():
+    cluster = make_cluster(n_nodes=2, n_meta=1, promote_threshold=4)
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    env = cluster.env
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        for i in range(8):
+            qd = yield from m0.sys_queue()
+            yield from m0.sys_qconnect(qd, "n1")
+            rc = yield from m0.sys_qpush(qd, [WorkRequest(
+                op="READ", wr_id=i, local_mr=mr, local_off=0,
+                remote_rkey=mr_srv.rkey, remote_off=0, nbytes=8)])
+            assert rc == 0
+            yield from m0.qpop_block(qd)
+            yield env.timeout(100.0)
+        return True
+
+    assert env.run_process(scenario(), "s")
+    env.run()
+    assert m0.stat_promotions >= 1
+    assert m0.pools[0].has_rc("n1")
+    # and a later qconnect selects RC (Table 2 fast path)
+    def check():
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        assert m0.vqs[qd].kind == "RC"
+        return True
+    assert env.run_process(check(), "c")
+
+
+def test_lru_eviction_demotes_to_dc():
+    cluster = make_cluster(n_nodes=4, n_meta=1, promote_threshold=2,
+                           rc_cap=1)
+    m0 = cluster.module("n0")
+    env = cluster.env
+
+    def scenario():
+        mrs = {}
+        for peer in ("n1", "n2"):
+            mod = cluster.module(peer)
+            mrs[peer] = yield from mod.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        for peer in ("n1", "n1", "n1", "n2", "n2", "n2"):
+            qd = yield from m0.sys_queue()
+            yield from m0.sys_qconnect(qd, peer)
+            rc = yield from m0.sys_qpush(qd, [WorkRequest(
+                op="READ", wr_id=1, local_mr=mr, local_off=0,
+                remote_rkey=mrs[peer].rkey, remote_off=0, nbytes=8)])
+            assert rc == 0
+            yield from m0.qpop_block(qd)
+            yield env.timeout(200.0)
+        return True
+
+    assert env.run_process(scenario(), "s")
+    env.run()
+    pool = m0.pools[0]
+    assert len(pool.rc) <= 1                 # cap respected
+    assert m0.stat_promotions >= 2           # both peers were promoted
+
+
+def test_transfer_preserves_fifo_on_live_stream():
+    """Send a numbered message stream; force a DC->RC transfer mid-stream;
+    the receiver must observe strictly increasing sequence numbers."""
+    cluster = make_cluster(n_nodes=2, n_meta=1, promote_threshold=3)
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    env = cluster.env
+    N = 30
+    received = []
+
+    def server():
+        qd = yield from m1.sys_queue()
+        yield from m1.sys_qbind(qd, 9000)
+        mr = yield from m1.sys_qreg_mr(1 << 16)
+        for i in range(N):
+            yield from m1.sys_qpush_recv(qd, mr, 64 * i, 64, wr_id=i)
+        got = 0
+        while got < N:
+            msgs = yield from m1.sys_qpop_msgs(qd)
+            for msg in msgs:
+                raw = cluster.node("n1").read_bytes(
+                    mr.addr, 64 * msg.wr_id, 4)
+                received.append(int(np.frombuffer(raw, np.int32)[0]))
+                got += 1
+            yield env.timeout(1.0)
+        return True
+
+    def client():
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1", port=9000)
+        mr = yield from m0.sys_qreg_mr(1 << 16)
+        buf = cluster.node("n0").buffer(mr.addr)
+        for i in range(N):
+            buf[8 * i: 8 * i + 4] = np.frombuffer(
+                np.int32(i).tobytes(), np.uint8)
+            rc = yield from m0.sys_qpush(qd, [WorkRequest(
+                op="SEND", wr_id=i, local_mr=mr, local_off=8 * i,
+                nbytes=4)])
+            assert rc == 0
+            yield from m0.qpop_block(qd)
+            # extra qconnects to the same peer heat it past the threshold
+            tmp = yield from m0.sys_queue()
+            yield from m0.sys_qconnect(tmp, "n1")
+            yield env.timeout(30.0)
+        return True
+
+    sp = env.process(server(), "server")
+    cp = env.process(client(), "client")
+    env.run()
+    assert sp.triggered and cp.triggered
+    assert received == list(range(N))        # FIFO preserved across xfer
+    assert m0.stat_transfers >= 1            # a transfer really happened
+
+
+@pytest.mark.parametrize("nbytes", [100, 5_000, 100_000, 1_000_000])
+def test_zero_copy_payloads(nbytes):
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    env = cluster.env
+    rng = np.random.RandomState(0)
+    payload = rng.randint(0, 255, nbytes).astype(np.uint8)
+    out = {}
+
+    def server():
+        qd = yield from m1.sys_queue()
+        yield from m1.sys_qbind(qd, 9100)
+        mr = yield from m1.sys_qreg_mr(2 * nbytes + 4096)
+        yield from m1.sys_qpush_recv(qd, mr, 0, nbytes + 64, wr_id=1)
+        while True:
+            msgs = yield from m1.sys_qpop_msgs(qd)
+            if msgs:
+                break
+            yield env.timeout(1.0)
+        out["data"] = cluster.node("n1").read_bytes(
+            mr.addr, 0, msgs[0].byte_len)
+        return True
+
+    def client():
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1", port=9100)
+        mr = yield from m0.sys_qreg_mr(2 * nbytes + 4096)
+        cluster.node("n0").buffer(mr.addr)[:nbytes] = payload
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="SEND", wr_id=1, local_mr=mr, local_off=0, nbytes=nbytes)])
+        assert rc == 0
+        yield from m0.qpop_block(qd)
+        return True
+
+    sp = env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered
+    assert np.array_equal(out["data"], payload)
+    if nbytes > m1.cm.kernel_msg_buf_bytes:
+        assert m1.stat_zc_reads >= 1         # took the zero-copy path
+    else:
+        assert m1.stat_zc_reads == 0

@@ -1,0 +1,141 @@
+"""Hardware-level QP accounting: the failure modes Algorithm 2 must
+prevent actually happen on the raw QP (LITE's failure in Fig 13b)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Fabric, QP, QPError, QPState, QPType, WorkRequest,
+                        connect_rc_pair)
+
+
+def make_pair(sq_depth=8, cq_depth=8):
+    fab = Fabric()
+    a = fab.add_node("a")
+    b = fab.add_node("b")
+    qa, qb = QP(a, QPType.RC, sq_depth, cq_depth), \
+        QP(b, QPType.RC, sq_depth, cq_depth)
+    qa.state = QPState.RTS
+    qb.state = QPState.RTS
+    qa.peer = ("b", qb.qpn)
+    qb.peer = ("a", qa.qpn)
+    return fab, a, b, qa, qb
+
+
+def reg(node, nbytes=4096):
+    addr = node.alloc(nbytes)
+    return node.reg_mr(addr, nbytes)
+
+
+def rd(mr_l, mr_r, n=8, wr_id=1, signaled=True):
+    return WorkRequest(op="READ", wr_id=wr_id, signaled=signaled,
+                       local_mr=mr_l, local_off=0, remote_rkey=mr_r.rkey,
+                       remote_off=0, nbytes=n)
+
+
+def test_sq_overflow_errors_qp():
+    fab, a, b, qa, _ = make_pair(sq_depth=4)
+    la, rb = reg(a), reg(b)
+    with pytest.raises(QPError):
+        qa.post_send([rd(la, rb, wr_id=i) for i in range(5)])
+    assert qa.state == QPState.ERR
+
+
+def test_sq_reclaim_requires_polling():
+    fab, a, b, qa, _ = make_pair(sq_depth=4)
+    la, rb = reg(a), reg(b)
+    qa.post_send([rd(la, rb, wr_id=i) for i in range(4)])
+    fab.env.run()
+    # completed but NOT polled: entries still occupied
+    assert qa.sq_occupancy == 4
+    with pytest.raises(QPError):
+        qa.post_send([rd(la, rb)])
+    # fresh pair: poll then the space is back
+    fab, a, b, qa, _ = make_pair(sq_depth=4)
+    la, rb = reg(a), reg(b)
+    qa.post_send([rd(la, rb, wr_id=i) for i in range(4)])
+    fab.env.run()
+    got = qa.poll_cq(max_n=16)
+    assert len(got) == 4
+    assert qa.sq_occupancy == 0
+    qa.post_send([rd(la, rb)])          # no raise
+
+
+def test_unsignaled_covers_accounting():
+    fab, a, b, qa, _ = make_pair(sq_depth=8)
+    la, rb = reg(a), reg(b)
+    batch = [rd(la, rb, wr_id=i, signaled=False) for i in range(3)]
+    batch.append(rd(la, rb, wr_id=99, signaled=True))
+    qa.post_send(batch)
+    fab.env.run()
+    cqes = qa.poll_cq(max_n=16)
+    assert len(cqes) == 1               # only the signaled one
+    assert cqes[0].wr_id == 99
+    assert cqes[0].covers == 4          # retires the whole run
+    assert qa.sq_occupancy == 0
+
+
+def test_cq_overrun_errors_qp():
+    fab, a, b, qa, _ = make_pair(sq_depth=64, cq_depth=4)
+    la, rb = reg(a), reg(b)
+    for i in range(8):                  # all signaled, never polled
+        qa.post_send([rd(la, rb, wr_id=i)])
+    fab.env.run()
+    assert qa.state == QPState.ERR      # Fig 13b LITE failure mode
+
+
+def test_fifo_completion_order():
+    fab, a, b, qa, _ = make_pair(sq_depth=32)
+    la, rb = reg(a), reg(b)
+    sizes = [1024, 8, 512, 8, 2048, 8]  # different service times
+    qa.post_send([rd(la, rb, n=n, wr_id=i) for i, n in enumerate(sizes)])
+    fab.env.run()
+    cqes = qa.poll_cq(max_n=16)
+    assert [c.wr_id for c in cqes] == list(range(len(sizes)))
+
+
+def test_bad_rkey_errors():
+    fab, a, b, qa, _ = make_pair()
+    la = reg(a)
+    qa.post_send([WorkRequest(op="READ", wr_id=1, signaled=True,
+                              local_mr=la, remote_rkey=999999,
+                              remote_off=0, nbytes=8)])
+    fab.env.run()
+    assert qa.state == QPState.ERR
+    cqes = qa.poll_cq()
+    assert cqes and cqes[0].status == "ERR"
+
+
+def test_error_recovery_costs_reconfigure():
+    fab, a, b, qa, _ = make_pair(sq_depth=4)
+    la, rb = reg(a), reg(b)
+    with pytest.raises(QPError):
+        qa.post_send([rd(la, rb, wr_id=i) for i in range(5)])
+    t0 = fab.env.now
+    fab.env.run_process(qa.reset_from_error())
+    assert qa.state == QPState.RTS
+    # recovery pays the Configure cost (~850us) — what KRCORE must avoid
+    assert fab.env.now - t0 >= 800.0
+
+
+def test_full_rc_connect_costs():
+    fab = Fabric()
+    a, b = fab.add_node("a"), fab.add_node("b")
+    t0 = fab.env.now
+    qa, qb = fab.env.run_process(connect_rc_pair(fab, a, b))
+    elapsed_ms = (fab.env.now - t0) / 1000.0
+    assert 1.5 < elapsed_ms < 2.5       # LITE-style connect ~1.9ms
+    assert qa.state == QPState.RTS and qb.state == QPState.RTS
+
+
+def test_two_sided_delivery():
+    fab, a, b, qa, qb = make_pair()
+    from repro.core.qp import RecvBuffer
+    mrb = reg(b)
+    qb.post_recv(RecvBuffer(mrb, 0, 64, wr_id=7))
+    payload = np.frombuffer(b"hello!", dtype=np.uint8)
+    qa.post_send([WorkRequest(op="SEND", wr_id=1, signaled=True,
+                              payload=payload, dst="b", dst_qpn=qb.qpn)])
+    fab.env.run()
+    rc = qb.poll_recv_cq()
+    assert rc and rc[0].wr_id == 7 and rc[0].byte_len == 6
+    assert b.read_bytes(mrb.addr, 0, 6).tobytes() == b"hello!"

@@ -1,0 +1,171 @@
+"""RACE KVS (fabric + device table), sharding rules, HLO parser."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import make_cluster
+from repro.kvs import DeviceRaceTable, RaceKVStore
+from repro.kvs.race import RaceClient
+
+
+# ------------------------------------------------------------ fabric RACE
+def test_race_one_sided_lookup():
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    storage = cluster.node("n1")
+    store = RaceKVStore(storage, n_buckets=512)
+    for k in range(1, 101):
+        store.insert(k, f"v{k}".encode())
+    m0 = cluster.module("n0")
+    client = RaceClient(m0, store)
+    env = cluster.env
+
+    def scenario():
+        t0 = env.now
+        yield from client.bootstrap()
+        boot_us = env.now - t0
+        assert boot_us < 20.0            # microsecond-scale bootstrap
+        v = yield from client.lookup(7)
+        assert v == b"v7"
+        v = yield from client.lookup(55)
+        assert v == b"v55"
+        v = yield from client.lookup(9999)
+        assert v is None
+        # doorbell batching: a lookup is 2 READs in ONE roundtrip --
+        # it must cost well under 2 sequential read RTTs + 2 syscalls
+        t0 = env.now
+        yield from client.lookup(7)
+        assert env.now - t0 < 8.0
+        return True
+
+    assert env.run_process(scenario(), "s")
+    # storage node CPU was never involved in lookups (one-sided)
+    # (no RPC handler exists for the store at all — structural guarantee)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_device_race_table_pallas_matches_ref(seed):
+    rng = np.random.RandomState(seed % (2 ** 31))
+    table = DeviceRaceTable(n_buckets=128, nslot=8, vdim=32)
+    keys = rng.choice(np.arange(1, 5000), size=60, replace=False)
+    vals = {}
+    for k in keys:
+        v = rng.randn(32).astype(np.float32)
+        table.insert(int(k), v)
+        vals[int(k)] = v
+    queries = np.concatenate([keys[:20], rng.randint(5001, 9999, 10)])
+    v_pal, f_pal = table.lookup_batch(queries, impl="pallas")
+    v_ref, f_ref = table.lookup_batch(queries, impl="ref")
+    np.testing.assert_array_equal(np.array(f_pal), np.array(f_ref))
+    np.testing.assert_allclose(np.array(v_pal), np.array(v_ref))
+    for i, k in enumerate(queries[:20]):
+        assert int(np.array(f_pal)[i]) == 1
+        np.testing.assert_allclose(np.array(v_pal)[i], vals[int(k)],
+                                   atol=1e-6)
+    assert not np.array(f_pal)[20:].any()
+
+
+# --------------------------------------------------------------- shardings
+def test_param_specs_cover_all_archs():
+    from repro.configs import all_archs, get_config
+    from repro.distributed import param_specs
+    from repro.launch.steps import params_struct
+    for arch in all_archs():
+        cfg = get_config(arch)
+        ps = params_struct(cfg)
+        specs = param_specs(cfg, ps)
+        flat_p = jax.tree_util.tree_leaves_with_path(ps)
+        flat_s = jax.tree_util.tree_leaves(specs,
+                                           is_leaf=lambda x: isinstance(
+                                               x, P))
+        assert len(flat_p) == len(flat_s)
+        for (path, leaf), spec in zip(flat_p, flat_s):
+            assert isinstance(spec, P)
+            assert len(spec) <= leaf.ndim, (arch, path, spec, leaf.shape)
+            # every model-sharded dim must divide by 16
+            for i, ax in enumerate(spec):
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                for a in axes:
+                    if a == "model":
+                        assert leaf.shape[i] % 16 == 0, (arch, path, spec)
+
+
+def test_uneven_vocab_falls_back_to_dmodel_sharding():
+    from repro.configs import get_config
+    from repro.distributed import param_specs
+    from repro.launch.steps import params_struct
+    cfg = get_config("seamless_m4t_medium")          # vocab 256206
+    specs = param_specs(cfg, params_struct(cfg))
+    assert specs["embed"] == P(None, "model")
+
+
+def test_fsdp_adds_data_axis():
+    from repro.configs import get_config
+    from repro.distributed import param_specs
+    from repro.launch.steps import params_struct
+    cfg = get_config("deepseek_v2_236b")
+    specs = param_specs(cfg, params_struct(cfg))
+    flat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    n_data = sum(1 for s in flat for ax in s if ax == "data")
+    assert n_data > 10                # the big matrices picked up "data"
+
+
+def test_cache_specs_structures():
+    from repro.configs import all_archs, get_config
+    from repro.distributed import cache_specs
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import cache_struct
+    from repro.models.config import DECODE_32K
+    mesh = make_host_mesh()
+    for arch in all_archs():
+        cfg = get_config(arch)
+        cs = cache_struct(cfg, DECODE_32K)
+        specs = cache_specs(cfg, mesh, cs, DECODE_32K.global_batch)
+        # same tree structure (None leaves allowed on both sides)
+        jax.tree_util.tree_map(lambda a, b: None, cs, specs,
+                               is_leaf=lambda x: isinstance(x, P))
+
+
+# -------------------------------------------------------------- HLO parser
+def test_hlo_collective_parser():
+    from repro.launch.hlo_stats import collective_stats
+    hlo = """
+  %ar = bf16[1024,512]{1,0} all-reduce(%x), channel_id=1, replica_groups=[32,16]<=[512], to_apply=%add
+  %ag = f32[2048]{0} all-gather(%y), channel_id=2, replica_groups=[16,32]<=[512], dimensions={0}
+  ROOT %cp = bf16[64,64]{1,0} collective-permute(%z), channel_id=3, source_target_pairs={{0,1}}
+  %other = f32[8,8]{1,0} add(%a, %b)
+"""
+    s = collective_stats(hlo)
+    assert s.counts["all-reduce"] == 1
+    assert s.counts["all-gather"] == 1
+    assert s.counts["collective-permute"] == 1
+    assert s.result_bytes["all-reduce"] == 1024 * 512 * 2
+    assert s.result_bytes["all-gather"] == 2048 * 4
+    # ring model: AR counts 2x(k-1)/k, AG (k-1)/k, CP 1x
+    expect = (2 * 1024 * 512 * 2 * 15 / 16
+              + 2048 * 4 * 31 / 32 + 64 * 64 * 2)
+    assert abs(s.link_bytes - expect) < 1.0
+
+
+def test_depth_variant_math():
+    import importlib
+    dr = importlib.import_module("repro.launch.dryrun")
+    from repro.configs import get_config
+    for arch, expect_depths in [
+        ("qwen2_0_5b", (1, 2)), ("gemma2_2b", (2, 4)),
+        ("deepseek_v2_236b", (2, 3)), ("zamba2_1_2b", (8, 14)),
+        ("seamless_m4t_medium", (2, 4)),
+    ]:
+        cfg = get_config(arch)
+        a, b, mult = dr.depth_variants(cfg)
+        assert (a.n_layers, b.n_layers) == expect_depths
+        # extrapolation recovers full depth: a + mult*(b-a) == n_layers
+        assert a.n_layers + mult * (b.n_layers - a.n_layers) == \
+            cfg.n_layers
+        assert not a.scan_layers and not b.scan_layers

@@ -1,0 +1,107 @@
+"""DES engine basics + cost-model numbers the paper states."""
+
+import pytest
+
+from repro.core.sim import Environment, Resource, Store
+from repro.core.costmodel import DEFAULT, validate
+
+
+def test_timeout_ordering():
+    env = Environment()
+    order = []
+
+    def proc(name, delay):
+        yield env.timeout(delay)
+        order.append((env.now, name))
+
+    env.process(proc("b", 5.0))
+    env.process(proc("a", 1.0))
+    env.process(proc("c", 5.0))     # ties broken by creation order
+    env.run()
+    assert [n for _, n in order] == ["a", "b", "c"]
+    assert env.now == 5.0
+
+
+def test_resource_fifo_queueing():
+    env = Environment()
+    done = []
+
+    def user(i):
+        yield from res.serve(10.0)
+        done.append((env.now, i))
+
+    res = Resource(env, capacity=1)
+    for i in range(4):
+        env.process(user(i))
+    env.run()
+    assert [t for t, _ in done] == [10.0, 20.0, 30.0, 40.0]
+    assert [i for _, i in done] == [0, 1, 2, 3]
+
+
+def test_resource_capacity_parallelism():
+    env = Environment()
+    done = []
+
+    def user(i):
+        yield from res.serve(10.0)
+        done.append(env.now)
+
+    res = Resource(env, capacity=2)
+    for i in range(4):
+        env.process(user(i))
+    env.run()
+    assert done == [10.0, 10.0, 20.0, 20.0]
+
+
+def test_store_blocking_get():
+    env = Environment()
+    got = []
+
+    def consumer():
+        item = yield store.get()
+        got.append((env.now, item))
+
+    def producer():
+        yield env.timeout(3.0)
+        store.put("x")
+
+    store = Store(env)
+    env.process(consumer())
+    env.process(producer())
+    env.run()
+    assert got == [(3.0, "x")]
+
+
+def test_process_join_returns_value():
+    env = Environment()
+
+    def inner():
+        yield env.timeout(2.0)
+        return 42
+
+    def outer():
+        val = yield env.process(inner())
+        return val + 1
+
+    assert env.run_process(outer()) == 43
+
+
+# ------------------------------------------------------------- cost model
+def test_paper_constants():
+    v = validate()
+    # Fig 3 / §2.2.1: user-space control path ~15.7ms
+    assert 15.0 < v["verbs_control_ms"] < 16.5
+    # §2.2.2: optimized LITE ~2ms per connection, 712 QPs/sec
+    assert 1.5 < v["lite_connect_ms"] < 2.5
+    assert 650 < v["lite_qps_per_sec"] < 780
+    # Fig 3a: 8B READ ~2us
+    assert 1.5 < v["read_8b_rtt_us"] < 2.5
+
+
+def test_memory_constants():
+    cm = DEFAULT
+    # §2.2.2 footnote: RCQP >= 159KB; §3.1: DCT metadata 12B
+    assert cm.rcqp_bytes >= 159 * 1024
+    assert cm.dct_meta_bytes == 12
+    # LITE @10k nodes >= 1.52GB (paper §2.2.2 Issue#2)
+    assert cm.rcqp_bytes * 10_000 >= 1.52e9

@@ -1,0 +1,181 @@
+"""Data pipeline, optimizer, checkpoint, compression, elastic pool."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import SyntheticLM, pack_documents
+from repro.distributed.compression import (compressed_grad_tree,
+                                           dequantize_int8, ef_init,
+                                           quantize_int8)
+from repro.elastic import ExecutablePool, StragglerPolicy, speculative_map
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule)
+
+
+# ------------------------------------------------------------------- data
+def test_synthetic_determinism_and_seek():
+    a = SyntheticLM(vocab=97, seq_len=32, batch=4, seed=5)
+    b = SyntheticLM(vocab=97, seq_len=32, batch=4, seed=5)
+    xa = [next(a) for _ in range(3)]
+    xb = [next(b) for _ in range(3)]
+    for i in range(3):
+        np.testing.assert_array_equal(xa[i]["tokens"], xb[i]["tokens"])
+    c = SyntheticLM(vocab=97, seq_len=32, batch=4, seed=5)
+    c.seek(2)
+    np.testing.assert_array_equal(next(c)["tokens"], xa[2]["tokens"])
+
+
+def test_pack_documents_boundaries():
+    docs = [np.arange(1, 6), np.arange(10, 13), np.arange(20, 30)]
+    out = pack_documents(docs, seq_len=8)
+    assert out["tokens"].shape[1] == 8
+    flat_labels = out["labels"].reshape(-1)
+    # a -1 label at each document start (except possibly position 0 rule)
+    n_starts = int(np.sum(flat_labels == -1))
+    assert n_starts >= 2
+
+
+# ------------------------------------------------------------------ optim
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array([2.0])}
+    opt = adamw_init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        params, opt = adamw_update(params, g, opt, lr=5e-2,
+                                   weight_decay=0.0)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2)
+                         for x in jax.tree_util.tree_leaves(clipped)))
+    assert abs(float(total) - 1.0) < 1e-5
+    assert float(norm) > 30.0
+
+
+def test_cosine_schedule():
+    sched = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(sched(jnp.asarray(5))) < 1e-3
+    assert abs(float(sched(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(sched(jnp.asarray(100))) < 1e-5
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones((2,), jnp.bfloat16)},
+            "t": (jnp.zeros((1,)), jnp.full((2, 2), 7.0))}
+    save_checkpoint(str(tmp_path), 42, tree, {"note": "hi"})
+    assert latest_step(str(tmp_path)) == 42
+    step, restored, meta = restore_checkpoint(str(tmp_path), tree)
+    assert step == 42 and meta["note"] == "hi"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # fake a crashed (uncommitted) later step
+    broken = tmp_path / "step_00000002"
+    broken.mkdir()
+    (broken / "arrays.npz").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, jax.tree_util.tree_map(lambda x: x + s, tree))
+    mgr.wait()
+    steps = sorted(int(n[5:]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+    step, restored, _ = mgr.restore_latest(tree)
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(restored["w"]), 4.0)
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"w": jnp.zeros((3,))})
+
+
+# ------------------------------------------------------------ compression
+def test_quantize_int8_bounds():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(1000).astype(np.float32) * 3)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_preserves_mean_gradient():
+    """Sum of EF-compressed grads converges to the sum of true grads."""
+    rng = np.random.RandomState(1)
+    true = rng.randn(64).astype(np.float32)
+    ef = {"g": jnp.zeros((64,), jnp.float32)}
+    acc = np.zeros(64, np.float64)
+    acc_true = np.zeros(64, np.float64)
+    for t in range(200):
+        g = {"g": jnp.asarray(true + 0.1 * rng.randn(64).astype(np.float32))}
+        comp, ef = compressed_grad_tree(g, ef)
+        acc += np.asarray(comp["g"], np.float64)
+        acc_true += np.asarray(g["g"], np.float64)
+    # error feedback: accumulated compressed signal tracks the true one
+    rel = np.abs(acc - acc_true).max() / np.abs(acc_true).max()
+    assert rel < 0.02
+
+
+# ---------------------------------------------------------------- elastic
+def test_executable_pool_hybrid_semantics():
+    pool = ExecutablePool(coarsen=lambda k: ("ladder", k[1]))
+    pool.put(("ladder", 4), "generic-4", kind="generic")
+    kind, v = pool.get(("exact", 4))
+    assert kind == "generic" and v == "generic-4"   # DC-analogue hit
+    pool.put(("exact", 4), "special-4")
+    kind, v = pool.get(("exact", 4))
+    assert kind == "specialized" and v == "special-4"  # RC-analogue
+    kind, v = pool.get(("exact", 8))
+    assert kind == "miss" and v is None
+
+
+def test_executable_pool_background_specialize():
+    pool = ExecutablePool()
+    pool.specialize_async("k", lambda: "built")
+    pool.wait_all()
+    kind, v = pool.get("k")
+    assert kind == "specialized" and v == "built"
+
+
+def test_straggler_policy_and_speculation():
+    pol = StragglerPolicy(threshold=2.0)
+    assert pol.detect([1.0, 1.1, 0.9, 5.0]) == [3]
+    assert pol.detect([1.0, 1.0]) == []
+
+    speeds = [1.0, 1.0, 1.0, 10.0]          # one 10x straggler
+    res_plain, t_plain, _ = speculative_map(
+        lambda t, w: (t, w), 8, speeds,
+        policy=StragglerPolicy(threshold=100.0))   # mitigation off
+    res_fix, t_fix, stats = speculative_map(
+        lambda t, w: (t, w), 8, speeds, policy=StragglerPolicy(2.0))
+    assert stats["backups"] >= 1
+    assert t_fix < t_plain                  # makespan improved
+    assert [r[0] for r in res_fix] == list(range(8))

@@ -1,0 +1,160 @@
+"""Property tests (hypothesis) for Algorithm 2's invariants: arbitrary
+signaled/unsignaled batch patterns from MULTIPLE VirtQueues sharing one
+physical QP never corrupt it, and completion dispatch is exact."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import WorkRequest, make_cluster
+from repro.core.qp import QPState
+
+
+def build_cluster():
+    return make_cluster(n_nodes=2, n_meta=1)
+
+
+@st.composite
+def batch_plan(draw):
+    """A list of per-vq batches: (vq_index, [signaled flags])."""
+    n_vqs = draw(st.integers(1, 3))
+    n_batches = draw(st.integers(1, 6))
+    plans = []
+    for _ in range(n_batches):
+        vq = draw(st.integers(0, n_vqs - 1))
+        flags = draw(st.lists(st.booleans(), min_size=1, max_size=12))
+        plans.append((vq, flags))
+    return n_vqs, plans
+
+
+@settings(max_examples=25, deadline=None)
+@given(batch_plan())
+def test_qpush_never_corrupts_shared_qp(plan):
+    n_vqs, plans = plan
+    cluster = build_cluster()
+    env = cluster.env
+    m0 = cluster.module("n0")
+    m1 = cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        qds = []
+        for _ in range(n_vqs):
+            qd = yield from m0.sys_queue()
+            rc = yield from m0.sys_qconnect(qd, "n1")
+            assert rc == 0
+            qds.append(qd)
+        expected = {qd: [] for qd in qds}
+        wid = 1000
+        for vq_i, flags in plans:
+            qd = qds[vq_i]
+            reqs = []
+            for s in flags:
+                reqs.append(WorkRequest(
+                    op="READ", wr_id=wid, signaled=s, local_mr=mr,
+                    local_off=0, remote_rkey=mr_srv.rkey, remote_off=0,
+                    nbytes=8))
+                if s:
+                    expected[qd].append(wid)
+                wid += 1
+            rc = yield from m0.sys_qpush(qd, reqs)
+            assert rc == 0
+        # drain every vq: each signaled wr_id must pop exactly once, FIFO
+        for qd in qds:
+            got = []
+            for _ in range(len(expected[qd])):
+                ent = yield from m0.qpop_block(qd)
+                assert not ent.err
+                got.append(ent.user_wr_id)
+            assert got == expected[qd]
+            # no spurious extra completions
+            extra = yield from m0.sys_qpop(qd)
+            assert extra is None
+        return True
+
+    assert env.run_process(scenario(), "scenario")
+    # the shared physical QPs must still be healthy
+    for pool in m0.pools:
+        for qp in pool.dc_qps:
+            assert qp.state == QPState.RTS
+        for ent in pool.rc.values():
+            assert ent.qp.state == QPState.RTS
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(20, 120))
+def test_qpush_handles_batches_beyond_queue_depth(n_reqs):
+    """Batches larger than the physical depth are segmented + the queue is
+    voluntarily polled (Alg. 2 lines 2-4) — LITE dies here (Fig 13b)."""
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    # shrink the physical queues to force the clearing path
+    pool = m0.pools[0]
+    for qp in pool.dc_qps:
+        qp.sq_depth, qp.cq_depth = 16, 16
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        reqs = [WorkRequest(op="READ", wr_id=i, signaled=(i % 3 == 0),
+                            local_mr=mr, local_off=0,
+                            remote_rkey=mr_srv.rkey, remote_off=0,
+                            nbytes=8)
+                for i in range(n_reqs)]
+        rc = yield from m0.sys_qpush(qd, reqs)
+        assert rc == 0
+        want = [i for i in range(n_reqs) if i % 3 == 0]
+        for w in want:
+            ent = yield from m0.qpop_block(qd)
+            assert ent.user_wr_id == w
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+    for qp in m0.pools[0].dc_qps:
+        assert qp.state == QPState.RTS
+
+
+def test_malformed_requests_rejected_before_posting():
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        # bad opcode
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="FETCH_ADD_NOPE", wr_id=1, local_mr=mr,
+            remote_rkey=mr_srv.rkey, nbytes=8)])
+        assert rc == -1
+        # local MR out of bounds
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="READ", wr_id=1, local_mr=mr, local_off=4090,
+            remote_rkey=mr_srv.rkey, remote_off=0, nbytes=64)])
+        assert rc == -1
+        # remote MR overrun (ValidMR check)
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="READ", wr_id=1, local_mr=mr, local_off=0,
+            remote_rkey=mr_srv.rkey, remote_off=4000, nbytes=512)])
+        assert rc == -1
+        # unknown rkey
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="READ", wr_id=1, local_mr=mr, local_off=0,
+            remote_rkey=123456, remote_off=0, nbytes=8)])
+        assert rc == -1
+        # a well-formed one still works afterwards: QP not corrupted
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="READ", wr_id=42, local_mr=mr, local_off=0,
+            remote_rkey=mr_srv.rkey, remote_off=0, nbytes=8)])
+        assert rc == 0
+        ent = yield from m0.qpop_block(qd)
+        assert ent.user_wr_id == 42 and not ent.err
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+    assert all(qp.state == QPState.RTS
+               for qp in cluster.module("n0").pools[0].dc_qps)
