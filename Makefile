@@ -1,0 +1,20 @@
+# Single CI entry: tier-1 tests + the batched-data-plane bench smoke.
+# Everything runs on any host (simulated fabric + Pallas interpret mode);
+# no TPU required.
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: verify test smoke bench
+
+verify: test smoke
+
+test:
+	python -m pytest -x -q
+
+smoke:
+	python -m benchmarks.run --smoke
+
+bench:
+	python -m benchmarks.batched_lookup
+	python -m benchmarks.run

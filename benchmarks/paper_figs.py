@@ -566,7 +566,36 @@ def bench_fig14() -> List[Row]:
     return rows
 
 
+# ================================================ batched data plane
+def bench_batched() -> List[Row]:
+    """Throughput rows for the batch-first fast path: qpush_batch doorbell
+    batching, batched KV lookups, and the tiled multi-query lookup kernel
+    (vs their per-op counterparts). Full sweep + JSON artifact:
+    ``python -m benchmarks.batched_lookup``."""
+    from benchmarks.batched_lookup import (bench_fabric_batching,
+                                           bench_kernel_sweep,
+                                           bench_kv_batching)
+
+    rows: List[Row] = []
+    fb = bench_fabric_batching(n_wrs=256, signal_interval=16)
+    rows.append(("batched/qpush_batch_256wr", fb["batched_us_per_wr"],
+                 f"per-op={fb['per_op_us_per_wr']}us/wr "
+                 f"speedup={fb['speedup']}x (Storm-style doorbells)"))
+    kv = bench_kv_batching(n_keys=48)
+    rows.append(("batched/race_lookup_many_48key",
+                 kv["batched_us_per_key"],
+                 f"per-key={kv['per_op_us_per_key']}us/key "
+                 f"speedup={kv['speedup']}x"))
+    for r in bench_kernel_sweep([128], [128], repeats=2):
+        rows.append((f"batched/kernel_tiled_b{r['batch']}_v{r['vdim']}",
+                     r["tiled_us"],
+                     f"scalar={r['scalar_us']}us tput={r['tiled_qps']}q/s "
+                     f"speedup={r['speedup']}x (interpret)"))
+    return rows
+
+
 ALL_BENCHES = [
     bench_table2, bench_fig3, bench_fig8, bench_fig9a, bench_fig10,
     bench_fig11_9b, bench_fig12a, bench_fig12b, bench_fig13, bench_fig14,
+    bench_batched,
 ]

@@ -3,6 +3,8 @@ table from the dry-run artifacts. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig8
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny shapes,
+                                                       # interpret mode
 """
 
 from __future__ import annotations
@@ -15,12 +17,42 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def _smoke() -> None:
+    """Tiny-shape regression gate for the batched data plane: runs the
+    kernel/fabric/kv batched benches in seconds on any host (interpret
+    mode) and fails loudly if the batched paths stop beating the per-op
+    paths. No files are written."""
+    from benchmarks.batched_lookup import run_suite
+
+    results = run_suite(smoke=True)
+    # explicit raises, not asserts: the gate must survive python -O
+    for row in results["kernel_sweep"]:
+        # tiny batches amortize nothing; gate only where tiling can win
+        if row["batch"] >= 8 * row["qblock"] and row["speedup"] <= 1.0:
+            raise SystemExit(f"tiled kernel regressed: {row}")
+        print(f"smoke/kernel_b{row['batch']}_v{row['vdim']},"
+              f"{row['tiled_us']:.3f},speedup={row['speedup']}x")
+    for name in ("fabric_qpush_batch", "kv_lookup_many"):
+        r = results[name]
+        if r["speedup"] <= 1.0:
+            raise SystemExit(f"{name} regressed: {r}")
+        print(f"smoke/{name},{r['batched_us']:.3f},"
+              f"speedup={r['speedup']}x")
+    print("SMOKE_OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on bench function names")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny batched-path smoke (CI without TPU)")
     args = ap.parse_args()
+
+    if args.smoke:
+        _smoke()
+        return
 
     from benchmarks.paper_figs import ALL_BENCHES
 

@@ -93,14 +93,27 @@ class DrTMKV:
 
 
 class KVClient:
-    """Client handle: one-sided lookup over an established QP."""
+    """Client handle: one-sided lookup over an established QP.
+
+    ``lookup`` issues one READ per probe; ``get_many`` coalesces one probe
+    READ *per key* into a single doorbell batch (selective signaling: only
+    the batch's last WR generates a CQE) and falls back to further probe
+    rounds only for the keys that collided — the Storm-style batched
+    one-sided discipline.
+
+    Scratch layout: single-key lookups use ``scratch_off`` (one slot);
+    batched lookups land probe ``j`` of a round at ``batch_scratch_off +
+    j * SLOT`` so they never stomp the single-slot region (or the module's
+    MR-check slot at offset 64 when sharing the module scratch).
+    """
 
     def __init__(self, qp: QP, server: DrTMKV, scratch_mr: MemoryRegion,
-                 scratch_off: int = 0):
+                 scratch_off: int = 0, batch_scratch_off: int = 128):
         self.qp = qp
         self.server = server
         self.scratch_mr = scratch_mr
         self.scratch_off = scratch_off
+        self.batch_scratch_off = batch_scratch_off
 
     def lookup(self, key: bytes, max_probes: int = 8
                ) -> Generator:
@@ -130,6 +143,52 @@ class KVClient:
             if k == 0:
                 return None
         return None
+
+    def get_many(self, keys: List[bytes], max_probes: int = 8
+                 ) -> Generator:
+        """Batched lookup: returns ``List[Optional[bytes]]`` aligned with
+        ``keys``. Each round posts ONE doorbell batch carrying one probe
+        READ per still-unresolved key (only the last WR signaled -> one
+        CQE per batch); only collided keys advance to the next round."""
+        results: List[Optional[bytes]] = [None] * len(keys)
+        if not keys:
+            return results
+        env = self.qp.env
+        hashes = [fnv1a(k) for k in keys]
+        cap = min((self.scratch_mr.length - self.batch_scratch_off) // SLOT,
+                  self.qp.sq_depth, self.qp.cq_depth - 1)
+        if cap < 1:
+            raise ValueError("scratch too small for batched lookup")
+        pending: List[Tuple[int, int]] = [(i, 0) for i in range(len(keys))]
+        while pending:
+            chunk, pending = pending[:cap], pending[cap:]
+            wrs = []
+            for j, (i, probe) in enumerate(chunk):
+                idx = (hashes[i] + probe) % self.server.n_slots
+                wrs.append(WorkRequest(
+                    op="READ", wr_id=0x4D42, signaled=(j == len(chunk) - 1),
+                    local_mr=self.scratch_mr,
+                    local_off=self.batch_scratch_off + j * SLOT,
+                    remote_rkey=self.server.mr.rkey, remote_off=idx * SLOT,
+                    nbytes=SLOT, dst=self.server.node.name))
+            self.qp.post_send(wrs)
+            while True:                       # one CQE covers the batch
+                cqes = self.qp.poll_cq()
+                if cqes:
+                    break
+                yield env.timeout(0.05)
+            if cqes[0].status != "OK":
+                return results                # server down / MR revoked
+            for j, (i, probe) in enumerate(chunk):
+                raw = self.qp.node.read_bytes(
+                    self.scratch_mr.addr,
+                    self.batch_scratch_off + j * SLOT, SLOT)
+                k, val = DrTMKV.parse_slot(raw)
+                if k == hashes[i]:
+                    results[i] = val
+                elif k != 0 and probe + 1 < max_probes:
+                    pending.append((i, probe + 1))   # collision: re-probe
+        return results
 
 
 @dataclasses.dataclass(frozen=True)

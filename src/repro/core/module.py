@@ -275,22 +275,78 @@ class KRCoreModule:
 
     # ===================================================== data path: Alg. 2
     def sys_qpush(self, qd: int, wr_list: List[WorkRequest]) -> Generator:
-        """Algorithm 2, qpush. Returns 0 or raises KRCoreError pre-post."""
+        """Algorithm 2, qpush. Returns 0 or raises KRCoreError pre-post.
+
+        One syscall crossing per call; the caller controls per-WR
+        ``signaled`` flags. For the batch-first fast path (automatic
+        selective signaling, one crossing for arbitrarily many WRs) see
+        :meth:`qpush_batch`.
+        """
         vq = self._vq(qd)
         qp = self._require_qp(vq)
-        cm = self.cm
-        yield self.env.timeout(cm.syscall_us)
-        # segment the batch (paper §4.4: "achieved by segmenting"). The
-        # limit must leave BOTH reservation loops satisfiable: the SQ needs
-        # len <= sq_depth and the CQ reservation needs len <= cq_depth - 1
-        # (a batch of exactly cq_depth could never reserve its CQEs).
-        limit = min(qp.sq_depth, qp.cq_depth - 1)
-        if len(wr_list) > limit:
-            mid = len(wr_list) // 2
-            yield from self.sys_qpush(qd, wr_list[:mid])
-            yield from self.sys_qpush(qd, wr_list[mid:])
-            return 0
+        yield self.env.timeout(self.cm.syscall_us)
+        return (yield from self._qpush_locked(vq, qp, wr_list))
 
+    def qpush_batch(self, qd: int, wr_list: List[WorkRequest],
+                    signal_interval: Optional[int] = None) -> Generator:
+        """Batched qpush: ONE doorbell / syscall crossing for the whole
+        batch, with automatic selective signaling.
+
+        Every ``signal_interval``-th WR plus the batch's last WR is
+        signaled, so N WRs generate exactly ``ceil(N / signal_interval)``
+        CQEs (and that many poppable CompEntries, each ``covers``-ing its
+        unsignaled run). ``signal_interval=None`` signals only the last WR
+        of each hardware-sized segment. The interval is clamped to
+        ``min(sq_depth, cq_depth - 1)``: a longer unsignaled run could
+        never be reclaimed (reclaim happens at poll of the covering CQE)
+        and would deadlock the SQ. Caller-set ``signaled`` flags are
+        overwritten — this is the batch-discipline entry point.
+
+        Returns the number of CompEntries queued (= ``ceil(N / interval)``,
+        what :meth:`qpop_batch` will eventually yield), or -1 if a WR
+        failed validation. Segmentation splits at signal boundaries (see
+        :meth:`_qpush_locked`) so it never inflates that count.
+        """
+        vq = self._vq(qd)
+        qp = self._require_qp(vq)
+        yield self.env.timeout(self.cm.syscall_us)
+        if not wr_list:
+            return 0
+        limit = self._segment_limit(qp)
+        k = limit if signal_interval is None else \
+            max(1, min(signal_interval, limit))
+        n = len(wr_list)
+        n_entries = 0
+        for i, req in enumerate(wr_list):
+            req.signaled = ((i + 1) % k == 0) or (i == n - 1)
+            n_entries += int(req.signaled)
+        rc = yield from self._qpush_locked(vq, qp, wr_list)
+        return n_entries if rc == 0 else rc
+
+    @staticmethod
+    def _segment_limit(qp: QP) -> int:
+        """Largest batch one doorbell may carry. The limit must leave BOTH
+        reservation loops satisfiable: the SQ needs len <= sq_depth and the
+        CQ reservation needs len <= cq_depth - 1 (a batch of exactly
+        cq_depth could never reserve its CQEs)."""
+        return min(qp.sq_depth, qp.cq_depth - 1)
+
+    def _qpush_locked(self, vq: VirtQueue, qp: QP,
+                      wr_list: List[WorkRequest]) -> Generator:
+        """Post a batch (Alg. 2 body), segmenting at signal boundaries.
+
+        The validity pre-checks run over the ENTIRE batch before any
+        segment is posted, so a malformed WR anywhere in the batch rejects
+        the whole batch atomically — no orphaned in-flight WRs or queued
+        CompEntries from earlier segments (Alg.2 line 7's "before any
+        mutation" guarantee, kept across segmentation).
+
+        Splitting at the last signaled WR within the hardware limit (paper
+        §4.4: "achieved by segmenting") keeps every segment's tail signaled
+        whenever the caller's signaling pattern allows it, so segmentation
+        never inflates the CQE count of a selectively-signaled batch.
+        """
+        cm = self.cm
         # ---- validity pre-checks (Alg.2 line 7; done before any mutation
         # so a malformed batch leaves no queueing elements behind) --------
         for req in wr_list:
@@ -303,6 +359,23 @@ class KRCoreModule:
                 ok = yield from self._check_remote_mr(vq, req)
                 if not ok:
                     return -1                               # Alg.2 line 8
+        yield from self._post_segments(vq, qp, wr_list)
+        return 0
+
+    def _post_segments(self, vq: VirtQueue, qp: QP,
+                       wr_list: List[WorkRequest]) -> Generator:
+        """Segment an already-validated batch and post each doorbell."""
+        cm = self.cm
+        limit = self._segment_limit(qp)
+        if len(wr_list) > limit:
+            split = limit
+            for j in range(limit, 0, -1):
+                if wr_list[j - 1].signaled:
+                    split = j
+                    break
+            yield from self._post_segments(vq, qp, wr_list[:split])
+            yield from self._post_segments(vq, qp, wr_list[split:])
+            return
 
         # ---- clear space (Alg.2 lines 2-4) -------------------------------
         while qp.sq_depth - qp.sq_occupancy < len(wr_list):
@@ -319,7 +392,9 @@ class KRCoreModule:
         for req in wr_list:
             self._fill_routing(vq, req)
             if req.signaled:
-                vq.comp_queue.append(CompEntry(NOT_READY, req.wr_id))
+                vq.comp_queue.append(CompEntry(NOT_READY, req.wr_id,
+                                               covers=unsignaled_cnt + 1))
+                vq.uncomp_cnt += unsignaled_cnt + 1
                 req.wr_id = encode_wr_id(vq.id, unsignaled_cnt + 1)
                 unsignaled_cnt = 0
             else:
@@ -334,7 +409,6 @@ class KRCoreModule:
             if req.op == "SEND" and req.nbytes > cm.kernel_msg_buf_bytes:
                 self._to_zero_copy(vq, req)
         qp.post_send(wr_list)                               # line 23
-        return 0
 
     def sys_qpop(self, qd: int) -> Generator:
         """Algorithm 2, qpop: non-blocking; returns CompEntry or None."""
@@ -343,6 +417,14 @@ class KRCoreModule:
         self._qpop_inner(vq)
         return vq.pop_ready()
 
+    def qpop_batch(self, qd: int, max_n: int = 64) -> Generator:
+        """Batched qpop: ONE syscall crossing, bulk CQ drain, returns up to
+        ``max_n`` Ready CompEntries in FIFO order (possibly empty)."""
+        vq = self._vq(qd)
+        yield self.env.timeout(self.cm.syscall_us)
+        self._qpop_inner(vq)
+        return vq.pop_ready_batch(max_n)
+
     def qpop_block(self, qd: int, poll_us: float = 0.2) -> Generator:
         """Convenience: spin qpop until a completion arrives."""
         while True:
@@ -350,6 +432,17 @@ class KRCoreModule:
             if ent is not None:
                 return ent
             yield self.env.timeout(poll_us)
+
+    def qpop_batch_block(self, qd: int, n: int,
+                         poll_us: float = 0.2) -> Generator:
+        """Convenience: drain exactly ``n`` completions via qpop_batch."""
+        out: List[CompEntry] = []
+        while len(out) < n:
+            ents = yield from self.qpop_batch(qd, max_n=n - len(out))
+            out.extend(ents)
+            if len(out) < n:
+                yield self.env.timeout(poll_us)
+        return out
 
     def sys_qpush_recv(self, qd: int, mr: MemoryRegion, offset: int,
                        length: int, wr_id: int) -> Generator:
@@ -477,14 +570,18 @@ class KRCoreModule:
         # ensure our MR is remotely checkable
         # (already in ValidMR via qreg_mr)
 
-    def _qpop_inner(self, vq: VirtQueue) -> bool:
-        """Algorithm 2, QPopInner: poll the physical CQ(s), dispatch."""
+    def _qpop_inner(self, vq: VirtQueue, max_n: int = 64) -> bool:
+        """Algorithm 2, QPopInner: bulk-poll the physical CQ(s), dispatch.
+
+        One poll drains up to ``max_n`` CQEs — a whole doorbell batch's
+        completions retire in a single pass instead of one per call.
+        """
         progressed = False
         qps = [vq.qp] + ([vq.old_qp] if vq.old_qp is not None else [])
         for qp in qps:
             if qp is None:
                 continue
-            for cqe in qp.poll_cq(max_n=16):
+            for cqe in qp.poll_cq(max_n=max_n):
                 progressed = True
                 vq_id, comp_cnt = decode_wr_id(cqe.wr_id)
                 # hardware covers == encoded comp_cnt (see qp.py) — the
@@ -494,7 +591,15 @@ class KRCoreModule:
                 if vq_id:
                     target = self.vqs.get(vq_id)
                     if target is not None:
-                        ok = target.mark_ready()
+                        ent = target.mark_ready()
+                        # software covers bookkeeping must mirror hardware
+                        # — except after an ERR CQE of an unsignaled WR has
+                        # split a coverage run mid-batch (the vq.errored
+                        # path handles that case)
+                        assert (ent is None or cqe.status != "OK"
+                                or qp.stat_err_cqes
+                                or ent.covers == cqe.covers), \
+                            (ent.covers, cqe.covers)
                         if cqe.status != "OK":
                             target.errored = True
                 if cqe.status != "OK" and qp.state == QPState.ERR:

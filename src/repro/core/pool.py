@@ -94,9 +94,16 @@ class HybridQPPool:
         return ent.qp if ent else None
 
     def decay(self, factor: float = 0.5) -> None:
-        """Periodically decay use counts so hotness tracks the present."""
-        self.use_counts = {a: int(n * factor)
-                           for a, n in self.use_counts.items() if n > 1}
+        """Periodically decay use counts so hotness tracks the present.
+
+        Every count is decayed to ``int(n * factor)`` and an address is
+        dropped only once its *decayed* count reaches 0. (The old ``n > 1``
+        pre-filter deleted count-1 addresses outright — even with
+        ``factor == 1.0`` — while keeping higher counts that had decayed to
+        0, skewing hot-candidate hysteresis both ways.)
+        """
+        decayed = ((a, int(n * factor)) for a, n in self.use_counts.items())
+        self.use_counts = {a: n for a, n in decayed if n > 0}
 
     # ------------------------------------------------------------- sizes
     def memory_bytes(self) -> int:

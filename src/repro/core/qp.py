@@ -121,8 +121,9 @@ class QP:
         self.peer: Optional[Tuple[str, int]] = None     # (node name, qpn)
         # DC current hardware connection
         self.dc_connected_to: Optional[str] = None
-        # FIFO completion ordering
-        self._seq = itertools.count()
+        # FIFO completion ordering (plain int so error recovery can resync
+        # ``_next_complete`` without consuming a sequence number)
+        self._next_seq = 0
         self._next_complete = 0
         self._done_buffer: Dict[int, Tuple[WorkRequest, str, int]] = {}
         self._uncovered = 0        # completed-but-not-CQE'd (unsignaled) WRs
@@ -135,6 +136,10 @@ class QP:
         # stats
         self.stat_posted = 0
         self.stat_completed = 0
+        #: ERR CQEs generated so far; once nonzero, selective-signaling
+        #: coverage runs may have been split by mid-run error CQEs, so
+        #: software covers cross-checks must go lenient
+        self.stat_err_cqes = 0
 
     # ------------------------------------------------------------ control
     def create(self) -> Generator:
@@ -152,11 +157,22 @@ class QP:
         self.state = QPState.RTS
 
     def reset_from_error(self) -> Generator:
-        """Recover an ERR QP: full reconfigure (the cost KRCORE avoids)."""
+        """Recover an ERR QP: full reconfigure (the cost KRCORE avoids).
+
+        ``_next_complete`` is resynced to the next sequence number that will
+        be handed out WITHOUT consuming one: burning a seq here (the old
+        behaviour) permanently desynced ``_flush_in_order`` — the first WR
+        posted after recovery got seq ``burned+1`` while the flush cursor
+        waited on ``burned``, so no completion could ever be generated again.
+        WRs still in flight from before the reset complete into
+        ``_done_buffer`` with stale (< ``_next_complete``) seqs and are
+        dropped on arrival (see :meth:`_execute`).
+        """
         self.sq_occupancy = 0
         self.cq.clear()
         self._done_buffer.clear()
-        self._next_complete = next(self._seq)
+        self._uncovered = 0
+        self._next_complete = self._next_seq
         yield from self.fabric.nic_configure_qp(self.node)
         self.state = QPState.RTS
 
@@ -190,10 +206,13 @@ class QP:
         for wr in wrs:
             self.sq_occupancy += 1
             self.stat_posted += 1
-            seq = next(self._seq)
+            seq = self._next_seq
+            self._next_seq += 1
             self.env.process(self._execute(wr, seq), f"qp{self.qpn}.wr{seq}")
 
     def poll_cq(self, max_n: int = 1) -> List[Completion]:
+        """Drain up to ``max_n`` CQEs (pass a large ``max_n`` for a bulk
+        drain — one call retires a whole doorbell batch's completions)."""
         out: List[Completion] = []
         while self.cq and len(out) < max_n:
             cqe = self.cq.popleft()
@@ -254,7 +273,10 @@ class QP:
                         dct=dct, dct_connect=reconnect)
         except MRError:
             status = "ERR"
-            self._to_error("remote/local MR violation")
+            if seq >= self._next_complete:
+                self._to_error("remote/local MR violation")
+        if seq < self._next_complete:
+            return            # stale in-flight WR from before an error reset
         self._done_buffer[seq] = (wr, status, wr.nbytes)
         self._flush_in_order()
 
@@ -269,6 +291,8 @@ class QP:
                 if len(self.cq) >= self.cq_depth:
                     self._to_error("CQ overrun")     # Fig 13b LITE failure
                     return
+                if status == "ERR":
+                    self.stat_err_cqes += 1
                 self.cq.append(Completion(wr.wr_id, status, wr.op, nbytes,
                                           covers=self._uncovered))
                 self._uncovered = 0

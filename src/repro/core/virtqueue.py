@@ -11,6 +11,28 @@ API (§4.4) are handled exactly as in the paper:
 3. completion dispatch via wr_id encoding.
 
 wr_id encoding: ``(vq_id << 20) | comp_cnt`` with vq_id 0 == NULL.
+
+Batched data path
+-----------------
+
+``KRCoreModule.qpush_batch`` / ``qpop_batch`` post/drain whole doorbell
+batches through this abstraction with *selective signaling*: only every
+``signal_interval``-th WR (and always the batch's last WR) is signaled, so a
+batch of N WRs generates exactly ``ceil(N / signal_interval)`` CQEs — one
+doorbell, one syscall crossing, a handful of CQEs. The accounting lives
+here:
+
+* each :class:`CompEntry` records ``covers`` — how many SQ entries its CQE
+  retires (itself plus the preceding unsignaled run, Mellanox semantics);
+* :attr:`VirtQueue.uncomp_cnt` tracks this queue's outstanding WRs that a
+  still-unpolled CompEntry will retire. It rises by ``covers`` for every
+  entry queued at push time and falls by ``covers`` when the entry is
+  popped, so at quiescence it is exactly 0 — the invariant the batched
+  property tests pin down.
+
+``signal_interval`` is clamped to ``min(sq_depth, cq_depth - 1)``: a run of
+unsignaled WRs longer than the SQ could never be reclaimed (reclaim happens
+only when the covering CQE is *polled*), which would deadlock the queue.
 """
 
 from __future__ import annotations
@@ -41,10 +63,16 @@ def decode_wr_id(wr_id: int) -> Tuple[int, int]:
 
 @dataclasses.dataclass
 class CompEntry:
-    """Software completion-queue entry: [status, user_wr_id] (Alg. 2 l.11)."""
+    """Software completion-queue entry: [status, user_wr_id] (Alg. 2 l.11).
+
+    ``covers`` mirrors the hardware CQE's coverage: how many of this
+    VirtQueue's SQ entries (itself + the preceding unsignaled run) this
+    entry retires when popped.
+    """
     status: int
     user_wr_id: int
     err: bool = False
+    covers: int = 1
 
 
 @dataclasses.dataclass
@@ -91,21 +119,37 @@ class VirtQueue:
         self.old_qp: Optional[QP] = None
         self.in_transfer = False
         self.errored = False
+        #: outstanding WRs a queued-but-unpopped CompEntry will retire
+        #: (selective-signaling software accounting; 0 at quiescence)
+        self.uncomp_cnt = 0
 
     # ------------------------------------------------------------ helpers
     @property
     def connected(self) -> bool:
         return self.qp is not None
 
-    def mark_ready(self) -> bool:
-        """Mark the first NotReady completion entry Ready (Alg. 2 l.30)."""
+    def mark_ready(self) -> Optional[CompEntry]:
+        """Mark the first NotReady completion entry Ready (Alg. 2 l.30);
+        returns the entry (truthy) or None."""
         for ent in self.comp_queue:
             if ent.status == NOT_READY:
                 ent.status = READY
-                return True
-        return False
+                return ent
+        return None
 
     def pop_ready(self) -> Optional[CompEntry]:
         if self.comp_queue and self.comp_queue[0].status == READY:
-            return self.comp_queue.popleft()
+            ent = self.comp_queue.popleft()
+            self.uncomp_cnt = max(0, self.uncomp_cnt - ent.covers)
+            return ent
         return None
+
+    def pop_ready_batch(self, max_n: int) -> List[CompEntry]:
+        """Pop up to ``max_n`` Ready entries in FIFO order (bulk drain)."""
+        out: List[CompEntry] = []
+        while len(out) < max_n:
+            ent = self.pop_ready()
+            if ent is None:
+                break
+            out.append(ent)
+        return out

@@ -32,6 +32,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.launch.mesh import set_mesh
 
 
 # =========================================================== executable pool
@@ -207,7 +208,7 @@ class ElasticTrainer:
     def _builder(self, n: int):
         def build():
             mesh = self._mesh_for(n)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 step = self.make_step(mesh)
                 if self._example_batch is None:
                     return (mesh, jax.jit(step))
@@ -221,8 +222,18 @@ class ElasticTrainer:
                                                   state_struct)
                 batch_sh = {k: P("data", *([None] * (v.ndim - 1)))
                             for k, v in self._example_batch.items()}
+                if not hasattr(jax, "set_mesh"):
+                    # older jax: jit shardings must be concrete Shardings,
+                    # not bare PartitionSpecs
+                    wrap = lambda t: jax.tree_util.tree_map(  # noqa: E731
+                        lambda p: NamedSharding(mesh, p), t,
+                        is_leaf=lambda x: isinstance(x, P))
+                    state_sh, batch_sh = wrap(state_sh), wrap(batch_sh)
+                    out_sh = (NamedSharding(mesh, P()), state_sh)
+                else:
+                    out_sh = (P(), state_sh)
                 fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
-                             out_shardings=(P(), state_sh))
+                             out_shardings=out_sh)
                 compiled = fn.lower(state_struct, batch_struct).compile()
             return (mesh, compiled)
         return build
@@ -253,7 +264,7 @@ class ElasticTrainer:
                 self.state, jax.tree_util.tree_map(
                     lambda s: NamedSharding(mesh, s), spec))
         else:
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 self.state = self._init_state()
         self._mesh, self._step_fn = mesh, fn
         old_n, self.n_workers = self.n_workers, n

@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the RACE-lookup kernel."""
+"""jit'd public wrapper for the RACE-lookup kernels."""
 
 from __future__ import annotations
 
@@ -7,21 +7,47 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .race_lookup import race_lookup_pallas
+from .race_lookup import race_lookup_pallas, race_lookup_pallas_tiled
 from .ref import race_lookup_ref
 
+#: tables above this are too big to pin VMEM-resident for the tiled
+#: kernel; fall back to the scalar kernel's per-bucket DMA (which has no
+#: table-size bound). Conservative half of a ~16MB VMEM.
+TILED_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+
+@functools.partial(jax.jit,
+                   static_argnames=("impl", "interpret", "qblock"))
 def race_lookup(fp_table, val_table, queries, bucket_idx,
-                impl: str = "pallas", interpret: bool = True):
+                impl: str = "pallas", interpret: bool = True,
+                qblock: int = 64):
     """Batched two-choice hash lookup.
 
     fp_table (NB, NSLOT) i32, val_table (NB, NSLOT, VDIM), queries (NQ,)
     i32 fingerprints, bucket_idx (NQ, 2) i32 -> (values (NQ, VDIM),
     found (NQ,) i32). ``interpret=True`` runs the Pallas kernel body on
     CPU; on a real TPU pass interpret=False.
+
+    ``impl``:
+      * ``"pallas"`` — the tiled multi-query kernel (QBLOCK queries per
+        grid step, MXU one-hot select; ragged tails auto-padded) when the
+        tables fit the VMEM-residency budget, else the scalar kernel —
+        callers with arbitrarily large tables keep working,
+      * ``"pallas_tiled"`` — force the tiled kernel (caller guarantees the
+        tables fit VMEM),
+      * ``"pallas_scalar"`` — the one-query-per-step fallback (no VMEM
+        table-size bound; the batched_lookup benchmark baseline),
+      * ``"ref"`` — the pure-jnp oracle.
     """
     if impl == "ref":
         return race_lookup_ref(fp_table, val_table, queries, bucket_idx)
-    return race_lookup_pallas(fp_table, val_table, queries, bucket_idx,
-                              interpret=interpret)
+    table_bytes = (fp_table.size * fp_table.dtype.itemsize
+                   + val_table.size * val_table.dtype.itemsize)
+    if impl == "pallas_scalar" or (impl == "pallas"
+                                   and table_bytes >
+                                   TILED_VMEM_BUDGET_BYTES):
+        return race_lookup_pallas(fp_table, val_table, queries, bucket_idx,
+                                  interpret=interpret)
+    return race_lookup_pallas_tiled(fp_table, val_table, queries,
+                                    bucket_idx, qblock=qblock,
+                                    interpret=interpret)

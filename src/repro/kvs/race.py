@@ -6,7 +6,9 @@ Two deployments:
   data lives in a storage node's registered memory; *compute-node clients
   are fully one-sided* (lookup = two bucket READs issued in ONE doorbell
   batch — exactly the Fig 7 example the paper uses to show why the
-  low-level API matters vs LITE's one-READ-per-roundtrip).
+  low-level API matters vs LITE's one-READ-per-roundtrip). ``lookup_many``
+  scales the same discipline across keys: a whole chunk's bucket READs in
+  one ``qpush_batch`` doorbell with a single CQE.
 
 * ``DeviceRaceTable`` — the TPU-native analogue used by the elastic
   runtime's metadata service: the bucket array lives in device HBM and
@@ -77,13 +79,21 @@ class RaceKVStore:
 
 
 class RaceClient:
-    """Compute-node client: one-sided lookups through KRCORE."""
+    """Compute-node client: one-sided lookups through KRCORE.
+
+    ``lookup`` is the paper's Fig 7 example (2 READs, one doorbell);
+    ``lookup_many`` extends the same discipline across keys: ALL bucket
+    READs of a chunk of keys ride one ``qpush_batch`` doorbell (one syscall
+    crossing, one CQE), then every key's slots are compared locally.
+    """
 
     BUCKET_BYTES = NSLOT * SLOT_BYTES
 
-    def __init__(self, module: KRCoreModule, store: RaceKVStore):
+    def __init__(self, module: KRCoreModule, store: RaceKVStore,
+                 mr_bytes: int = 4096):
         self.module = module
         self.store = store
+        self.mr_bytes = mr_bytes
         self.qd: Optional[int] = None
         self.mr: Optional[MemoryRegion] = None
 
@@ -94,7 +104,7 @@ class RaceClient:
         rc = yield from self.module.sys_qconnect(
             self.qd, self.store.node.name)
         assert rc == 0
-        self.mr = yield from self.module.sys_qreg_mr(4096)
+        self.mr = yield from self.module.sys_qreg_mr(self.mr_bytes)
         return self.qd
 
     def lookup(self, key: int) -> Generator:
@@ -116,13 +126,47 @@ class RaceClient:
         yield from self.module.qpop_block(self.qd)
         raw = self.module.node.read_bytes(self.mr.addr, 0,
                                           2 * self.BUCKET_BYTES)
+        return self._scan_buckets(raw.tobytes(), key)
+
+    @staticmethod
+    def _scan_buckets(raw: bytes, key: int) -> Optional[bytes]:
+        """Local fingerprint compare over two gathered buckets."""
         want = _fp(key)
         for s in range(2 * NSLOT):
-            fp, vlen, val = _SLOT.unpack_from(raw.tobytes(),
-                                              s * SLOT_BYTES)
+            fp, vlen, val = _SLOT.unpack_from(raw, s * SLOT_BYTES)
             if fp == want:
                 return bytes(val[:vlen])
         return None
+
+    def lookup_many(self, keys: List[int]) -> Generator:
+        """Batched lookup: both bucket READs of EVERY key in a chunk ride
+        one qpush_batch doorbell (one syscall + one CQE per chunk vs two
+        syscalls + a CQE per key). Returns values aligned with ``keys``."""
+        results: List[Optional[bytes]] = [None] * len(keys)
+        per_key = 2 * self.BUCKET_BYTES
+        cap = self.mr.length // per_key
+        assert cap >= 1, "client MR smaller than one bucket pair"
+        for base in range(0, len(keys), cap):
+            chunk = keys[base:base + cap]
+            reqs = []
+            for j, key in enumerate(chunk):
+                off1, off2 = self.store.bucket_offsets(key)
+                for half, off in enumerate((off1, off2)):
+                    reqs.append(WorkRequest(
+                        op="READ", wr_id=2 * j + half, signaled=False,
+                        local_mr=self.mr,
+                        local_off=j * per_key + half * self.BUCKET_BYTES,
+                        remote_rkey=self.store.mr.rkey, remote_off=off,
+                        nbytes=self.BUCKET_BYTES))
+            n_cqes = yield from self.module.qpush_batch(self.qd, reqs)
+            assert n_cqes > 0
+            yield from self.module.qpop_batch_block(self.qd, n_cqes)
+            raw = self.module.node.read_bytes(
+                self.mr.addr, 0, len(chunk) * per_key).tobytes()
+            for j, key in enumerate(chunk):
+                results[base + j] = self._scan_buckets(
+                    raw[j * per_key:(j + 1) * per_key], key)
+        return results
 
 
 class DeviceRaceTable:

@@ -1,0 +1,126 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (not installed in the
+CI image; the tier-1 image bakes only the jax_pallas toolchain).
+
+Installed into ``sys.modules["hypothesis"]`` by conftest.py ONLY when the
+real package is missing, so environments that do have hypothesis keep its
+full shrinking/replay machinery. The subset implemented here is exactly
+what the test-suite uses:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers(a, b), st.booleans(), st.lists(elem, min_size, max_size),
+    st.sampled_from(seq), st.composite
+
+``given`` draws ``max_examples`` deterministic examples (seeded per test
+name, so failures reproduce) and runs the test body once per example. No
+shrinking — the failing example's values are attached to the assertion
+message instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable, List, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, example_fn: Callable[[random.Random], Any],
+                 label: str = "strategy"):
+        self._example_fn = example_fn
+        self.label = label
+
+    def example(self, rng: random.Random) -> Any:
+        return self._example_fn(rng)
+
+    def __repr__(self) -> str:            # pragma: no cover - debug aid
+        return f"<{self.label}>"
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    f"integers({min_value},{max_value})")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def lists(elements: Strategy, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return Strategy(draw, f"lists({elements.label})")
+
+
+def sampled_from(seq: Sequence[Any]) -> Strategy:
+    items = list(seq)
+    return Strategy(lambda rng: items[rng.randrange(len(items))],
+                    "sampled_from")
+
+
+def composite(fn: Callable) -> Callable:
+    """``@st.composite`` — fn's first arg is ``draw``."""
+    @functools.wraps(fn)
+    def make_strategy(*args: Any, **kwargs: Any) -> Strategy:
+        def draw_example(rng: random.Random) -> Any:
+            return fn(lambda s: s.example(rng), *args, **kwargs)
+        return Strategy(draw_example, f"composite({fn.__name__})")
+    return make_strategy
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored: Any) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: Strategy, **kw_strategies: Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper() -> None:
+            max_examples = getattr(wrapper, "_fallback_max_examples",
+                                   DEFAULT_MAX_EXAMPLES)
+            seed = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:8],
+                "big")
+            rng = random.Random(seed)
+            for i in range(max_examples):
+                args = [s.example(rng) for s in strategies]
+                kwargs = {k: s.example(rng)
+                          for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:                  # noqa: BLE001
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: "
+                        f"args={args!r} kwargs={kwargs!r}") from e
+        # hide the drawn parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.__wrapped__ = None
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "lists", "sampled_from",
+                 "composite"):
+        setattr(st_mod, name, globals()[name])
+    st_mod.SearchStrategy = Strategy
+    mod.strategies = st_mod
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
