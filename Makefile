@@ -1,11 +1,11 @@
-# Single CI entry: tier-1 tests + the batched-data-plane bench smoke.
-# Everything runs on any host (simulated fabric + Pallas interpret mode);
-# no TPU required.
+# Single CI entry: tier-1 tests + the batched-data-plane and serverless
+# bench smokes. Everything runs on any host (simulated fabric + Pallas
+# interpret mode); no TPU required.
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify test smoke bench
+.PHONY: verify test smoke bench deps-dev
 
 verify: test smoke
 
@@ -17,4 +17,14 @@ smoke:
 
 bench:
 	python -m benchmarks.batched_lookup
+	python -m benchmarks.serverless
 	python -m benchmarks.run
+
+# Optional dev deps (see requirements-dev.txt). The CI image bakes only
+# the jax_pallas toolchain; the suite falls back to
+# tests/_hypothesis_fallback.py when hypothesis is absent, but the real
+# package (shrinking, replay) is strictly better when installable.
+deps-dev:
+	python -m pip install -r requirements-dev.txt \
+	  || echo "deps-dev: install failed (offline image?) — tests will" \
+	          "use tests/_hypothesis_fallback.py"

@@ -594,8 +594,40 @@ def bench_batched() -> List[Row]:
     return rows
 
 
+# ================================================ serverless subsystem
+def bench_serverless() -> List[Row]:
+    """Fig 12b / Fig 13 analogues through the full serverless subsystem
+    (src/repro/serverless): ephemeral-function transfer latency vs the
+    Verbs/LITE baselines, a 3-stage chain epoch's doorbells-per-hop, and
+    the gateway under a spike trace. Full sweep + JSON artifact:
+    ``python -m benchmarks.serverless``."""
+    from benchmarks.serverless import (bench_chain, bench_traces,
+                                       bench_transfer)
+
+    rows: List[Row] = []
+    for r in bench_transfer([1024, 9216]):
+        rows.append((f"fig12b/serverless_transfer_{r['nbytes']}B",
+                     r["krcore_us"],
+                     f"verbs={r['verbs_us']}us lite={r['lite_us']}us "
+                     f"reduction={100 * r['reduction_vs_verbs']:.1f}% "
+                     f"(paper: 99%)"))
+    for r in bench_chain([32], payload_bytes=1024,
+                         transports=("krcore", "verbs")):
+        rows.append((f"fig13x/chain_k{r['k']}_transfer",
+                     r["krcore_transfer_us"],
+                     f"doorbells/hop={r['krcore_doorbells_per_hop']} "
+                     f"(budget ceil(K/slab)={r['doorbell_budget_per_hop']})"
+                     f" verbs={r['verbs_transfer_us']}us"))
+    for r in bench_traces(n_nodes=2, duration_us=50_000.0,
+                          rate_per_s=300.0):
+        rows.append((f"fig14x/gateway_{r['shape']}", r["p50_us"],
+                     f"p99={r['p99_us']}us warm_ratio={r['warm_ratio']} "
+                     f"n={r['n']}"))
+    return rows
+
+
 ALL_BENCHES = [
     bench_table2, bench_fig3, bench_fig8, bench_fig9a, bench_fig10,
     bench_fig11_9b, bench_fig12a, bench_fig12b, bench_fig13, bench_fig14,
-    bench_batched,
+    bench_batched, bench_serverless,
 ]

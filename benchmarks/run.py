@@ -18,10 +18,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _smoke() -> None:
-    """Tiny-shape regression gate for the batched data plane: runs the
-    kernel/fabric/kv batched benches in seconds on any host (interpret
-    mode) and fails loudly if the batched paths stop beating the per-op
-    paths. No files are written."""
+    """Tiny-shape regression gate for the batched data plane AND the
+    serverless subsystem: runs in seconds on any host (interpret mode)
+    and fails loudly if a gated path regresses. No files are written."""
     from benchmarks.batched_lookup import run_suite
 
     results = run_suite(smoke=True)
@@ -38,6 +37,24 @@ def _smoke() -> None:
             raise SystemExit(f"{name} regressed: {r}")
         print(f"smoke/{name},{r['batched_us']:.3f},"
               f"speedup={r['speedup']}x")
+
+    # serverless: Fig 12b transfer-latency gate + doorbells-per-hop gate
+    from benchmarks.serverless import check_gates
+    from benchmarks.serverless import run_suite as serverless_suite
+
+    sl = serverless_suite(smoke=True)
+    bad = check_gates(sl)
+    if bad:
+        raise SystemExit("; ".join(bad))
+    for row in sl["transfer"]:
+        print(f"smoke/serverless_transfer_{row['nbytes']}B,"
+              f"{row['krcore_us']:.3f},"
+              f"reduction={100 * row['reduction_vs_verbs']:.1f}%")
+    for row in sl["chain"]:
+        print(f"smoke/serverless_chain_k{row['k']},"
+              f"{row['krcore_transfer_us']:.3f},"
+              f"doorbells={row['krcore_doorbells_per_hop']}/"
+              f"{row['doorbell_budget_per_hop']}")
     print("SMOKE_OK")
 
 

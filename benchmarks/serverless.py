@@ -1,0 +1,274 @@
+"""Serverless-subsystem benchmark (paper §5.3.2, Fig 12b/13 analogues).
+
+Emits ``BENCH_serverless.json`` (repo root by default):
+
+    PYTHONPATH=src python -m benchmarks.serverless
+    PYTHONPATH=src python -m benchmarks.serverless --smoke   # tiny, CI
+
+Three suites, all on the simulated microsecond clock:
+
+* ``transfer``  — Fig 12b: an ephemeral function's end-to-end transfer
+  latency (connect + MR + payload) to a peer node, KRCORE vs the
+  fresh-process Verbs baseline vs kernel-shared LITE. The regression
+  gate pins the paper's qualitative claim: >= 90% reduction vs Verbs
+  for <= 16 KB payloads (paper: 99%).
+* ``chain``     — ServerlessBench TestCase5: a 3-stage chain epoch at
+  batch K; reports the per-stage fork/control/data decomposition and
+  the sender doorbells per hop (gate: <= ceil(K/slab) via the staging
+  kernel — in practice ONE doorbell, because all slabs of a hop ride a
+  single qpush_batch).
+* ``traces``    — the invocation gateway under Poisson / spike /
+  diurnal open-loop traces: p50/p99, warm ratio, placement balance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_serverless.json")
+
+
+# ---------------------------------------------------- Fig 12b: transfer
+def _measure_transfer(transport: str, nbytes: int) -> Dict:
+    """One ephemeral function sends ``nbytes`` to a function on another
+    machine. Returns fork/transfer decomposition (transfer = control +
+    data plane, the Fig 12b metric — fork is identical across transports
+    and reported separately)."""
+    from repro.core import WorkRequest, make_cluster
+    from repro.serverless import ContainerPool, FunctionDef
+
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    env = cluster.env
+    fn = FunctionDef(name="sender", mr_bytes=nbytes + 4096)
+    pool = ContainerPool(cluster, transport)
+    m1 = cluster.module("n1")
+    out: Dict = {}
+
+    def scenario():
+        # the receiving function already exists: its MR is not on the
+        # sender's critical path
+        if transport == "krcore":
+            mr_r = yield from m1.sys_qreg_mr(nbytes + 4096)
+        else:
+            node1 = cluster.node("n1")
+            mr_r = node1.reg_mr(node1.alloc(nbytes + 4096), nbytes + 4096)
+        t0 = env.now
+        kind, c = yield from pool.lease("n0", fn)
+        out["fork_us"] = env.now - t0
+        t0 = env.now
+        handle = yield from c.connect("n1")
+        wr = WorkRequest(op="WRITE", wr_id=1, signaled=True, local_mr=c.mr,
+                         local_off=0, remote_rkey=mr_r.rkey, remote_off=0,
+                         nbytes=nbytes)
+        if transport == "krcore":
+            mod = c.module
+            rc = yield from mod.sys_qpush(handle, [wr])
+            assert rc == 0
+            ent = yield from mod.qpop_block(handle)
+            assert not ent.err
+        else:
+            if transport == "lite":
+                yield env.timeout(cluster.fabric.cm.syscall_us)
+            handle.post_send([wr])
+            while not handle.poll_cq():
+                yield env.timeout(0.1)
+        out["transfer_us"] = env.now - t0
+        return True
+
+    env.run_process(scenario(), "xfer")
+    return out
+
+
+def bench_transfer(payload_sizes: List[int]) -> List[Dict]:
+    rows: List[Dict] = []
+    for nbytes in payload_sizes:
+        row: Dict = {"nbytes": int(nbytes)}
+        for transport in ("krcore", "verbs", "lite"):
+            m = _measure_transfer(transport, nbytes)
+            row[f"{transport}_us"] = round(m["transfer_us"], 3)
+            row[f"{transport}_fork_us"] = round(m["fork_us"], 1)
+        row["reduction_vs_verbs"] = round(
+            1.0 - row["krcore_us"] / row["verbs_us"], 4)
+        row["reduction_vs_lite"] = round(
+            1.0 - row["krcore_us"] / row["lite_us"], 4)
+        rows.append(row)
+    return rows
+
+
+# ------------------------------------------- TestCase5: chained functions
+def bench_chain(batch_sizes: List[int], payload_bytes: int = 1024,
+                slab_payloads: int = 16,
+                transports=("krcore", "lite", "verbs")) -> List[Dict]:
+    from repro.core import make_cluster
+    from repro.serverless import (ChainRunner, ContainerPool,
+                                  default_registry, expected_outputs)
+
+    names = ("extract", "transform", "load")
+    rows: List[Dict] = []
+    for k in batch_sizes:
+        row: Dict = {"k": int(k), "payload_bytes": int(payload_bytes),
+                     "slab_payloads": int(slab_payloads),
+                     "stages": len(names)}
+        for transport in transports:
+            cluster = make_cluster(n_nodes=3, n_meta=1)
+            reg = default_registry(payload_bytes=payload_bytes)
+            pool = ContainerPool(cluster, transport)
+            runner = ChainRunner(cluster, reg, pool, transport,
+                                 slab_payloads=slab_payloads)
+            rng = np.random.RandomState(k)
+            payloads = [rng.randint(0, 256, payload_bytes).astype(np.uint8)
+                        for _ in range(k)]
+
+            def scenario():
+                return (yield from runner.run_batch(
+                    names, ["n0", "n1", "n2"], k, payloads))
+
+            rep = cluster.env.run_process(scenario(), f"chain.{transport}")
+            exp = expected_outputs(reg, names, payloads)
+            assert all(np.array_equal(a, b)
+                       for a, b in zip(rep.outputs, exp)), \
+                f"{transport} chain corrupted payloads"
+            row[f"{transport}_total_us"] = round(rep.total_us, 1)
+            row[f"{transport}_transfer_us"] = round(rep.transfer_us, 2)
+            row[f"{transport}_doorbells_per_hop"] = max(
+                h.doorbells for h in rep.hops)
+            if transport == "krcore":
+                row["krcore_decomp"] = {
+                    "fork_wall_us": round(sum(s.fork_wall_us
+                                              for s in rep.stages), 1),
+                    "control_us": round(sum(h.control_us
+                                            for h in rep.hops), 2),
+                    "pack_us": round(sum(h.pack_us for h in rep.hops), 2),
+                    "send_us": round(sum(h.send_us for h in rep.hops), 2),
+                    "drain_us": round(sum(h.drain_us
+                                          for h in rep.hops), 2),
+                }
+        row["doorbell_budget_per_hop"] = math.ceil(k / slab_payloads)
+        if "verbs_transfer_us" in row:
+            row["transfer_reduction_vs_verbs"] = round(
+                1.0 - row["krcore_transfer_us"] / row["verbs_transfer_us"],
+                4)
+        rows.append(row)
+    return rows
+
+
+# ------------------------------------------------------ gateway + traces
+def bench_traces(n_nodes: int = 4, duration_us: float = 200_000.0,
+                 rate_per_s: float = 400.0) -> List[Dict]:
+    from repro.core import make_cluster
+    from repro.serverless import (ContainerPool, InvocationGateway,
+                                  default_registry, diurnal_trace,
+                                  poisson_trace, spike_trace)
+
+    shapes = {
+        "poisson": poisson_trace(rate_per_s, duration_us, seed=1),
+        "spike": spike_trace(rate_per_s / 4, rate_per_s * 4, duration_us,
+                             duration_us * 0.4, duration_us * 0.2, seed=2),
+        "diurnal": diurnal_trace(rate_per_s, duration_us,
+                                 period_us=duration_us / 2, seed=3),
+    }
+    rows: List[Dict] = []
+    for shape, arrivals in shapes.items():
+        cluster = make_cluster(n_nodes=n_nodes + 1, n_meta=1)
+        reg = default_registry(payload_bytes=1024)
+        pool = ContainerPool(cluster, "krcore", warm_target=4,
+                             prewarm_threshold=2)
+        workers = [f"n{i}" for i in range(n_nodes)]
+        gw = InvocationGateway(cluster, reg, pool, worker_nodes=workers,
+                               data_node=f"n{n_nodes}")
+
+        def scenario():
+            yield from gw.submit_trace("extract", arrivals,
+                                       payload_bytes=1024)
+            return True
+
+        cluster.env.run_process(scenario(), f"trace.{shape}")
+        s = gw.summary()
+        s["shape"] = shape
+        s["arrivals"] = len(arrivals)
+        rows.append({k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in s.items()})
+    return rows
+
+
+# ------------------------------------------------------------ gates/suite
+def check_gates(results: Dict) -> List[str]:
+    """Regression gates; returns a list of violation strings (empty =
+    pass). Explicit strings, not asserts: must survive python -O."""
+    bad: List[str] = []
+    for row in results["transfer"]:
+        if row["nbytes"] <= 16 * 1024 and row["reduction_vs_verbs"] < 0.90:
+            bad.append(f"transfer reduction below 90% gate: {row}")
+    for row in results["chain"]:
+        budget = row["doorbell_budget_per_hop"]
+        got = row.get("krcore_doorbells_per_hop", 0)
+        if got > budget:
+            bad.append(f"chain doorbells/hop {got} > ceil(K/slab) "
+                       f"{budget}: {row}")
+        if "transfer_reduction_vs_verbs" in row \
+                and row["transfer_reduction_vs_verbs"] < 0.90:
+            bad.append(f"chain transfer reduction below 90%: {row}")
+    for row in results["traces"]:
+        if row["n"] != row["arrivals"]:
+            bad.append(f"trace dropped invocations: {row}")
+    return bad
+
+
+def run_suite(smoke: bool = False) -> Dict:
+    if smoke:
+        transfer = bench_transfer([1024, 16 * 1024])
+        chain = bench_chain([32], payload_bytes=512, slab_payloads=16,
+                            transports=("krcore", "verbs"))
+        traces = bench_traces(n_nodes=2, duration_us=50_000.0,
+                              rate_per_s=300.0)
+    else:
+        transfer = bench_transfer([1024, 4096, 9216, 16 * 1024, 64 * 1024])
+        chain = bench_chain([8, 32, 64], payload_bytes=1024)
+        traces = bench_traces()
+    return {"transfer": transfer, "chain": chain, "traces": traces}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON (default: {DEFAULT_OUT}; smoke "
+                         f"runs write a separate _smoke file)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI without TPU)")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = DEFAULT_OUT.replace(".json", "_smoke.json") \
+            if args.smoke else DEFAULT_OUT
+    results = run_suite(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    for row in results["transfer"]:
+        print(f"transfer {row['nbytes']:6d}B  krcore={row['krcore_us']:8.1f}us"
+              f"  verbs={row['verbs_us']:10.1f}us  lite={row['lite_us']:8.1f}us"
+              f"  reduction={100 * row['reduction_vs_verbs']:.1f}% "
+              f"(paper: 99%)")
+    for row in results["chain"]:
+        print(f"chain k={row['k']:3d} krcore={row['krcore_transfer_us']}us"
+              f" doorbells/hop={row.get('krcore_doorbells_per_hop')}"
+              f" (budget {row['doorbell_budget_per_hop']})")
+    for row in results["traces"]:
+        print(f"trace {row['shape']:8s} n={row['n']} p50={row['p50_us']}us"
+              f" p99={row['p99_us']}us warm={row['warm_ratio']}")
+    print(f"wrote {args.out}")
+    bad = check_gates(results)
+    if bad:
+        raise SystemExit("; ".join(bad))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,61 +1,64 @@
 """Serverless data transfer (paper Fig 12b, §5.3.2 — ServerlessBench
-TestCase5 on Fn): an ephemeral function sends a payload to a function on
-another machine. The function's lifetime is so short that the RDMA control
-path dominates unless it is microsecond-scale.
+TestCase5 on Fn), now through the full serverless subsystem
+(src/repro/serverless): a container pool leases an ephemeral function,
+the function transfers its payload to a peer machine, and a 3-stage
+chain epoch moves a whole batch of payloads over the staged batched
+two-sided path — one doorbell per hop instead of one per invocation.
 
     PYTHONPATH=src python examples/serverless_transfer.py
 """
 
+import os
 import sys
 sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from repro.core import VerbsProcess, WorkRequest, make_cluster
+from repro.core import make_cluster
+from repro.serverless import (ChainRunner, ContainerPool, default_registry,
+                              expected_outputs)
+from benchmarks.serverless import _measure_transfer
 
+# ---- Fig 12b: single ephemeral function, per-transport transfer latency
+print("== ephemeral function -> remote function transfer (Fig 12b) ==")
 for nbytes in (1024, 4096, 9216):
-    cluster = make_cluster(n_nodes=2, n_meta=1)
-    env = cluster.env
-    m0, m1 = cluster.module("n0"), cluster.module("n1")
-    res = {}
+    kr = _measure_transfer("krcore", nbytes)
+    vb = _measure_transfer("verbs", nbytes)
+    print(f"{nbytes:6d}B  KRCORE {kr['transfer_us']:8.1f}us   "
+          f"Verbs {vb['transfer_us']:10.1f}us   "
+          f"reduction {100 * (1 - kr['transfer_us'] / vb['transfer_us']):.1f}%"
+          f"  (paper: 99%)")
 
-    def kr_fn():
-        t0 = env.now
-        qd = yield from m0.sys_queue()
-        yield from m0.sys_qconnect(qd, "n1")
-        mr = yield from m0.sys_qreg_mr(nbytes + 4096)
-        mr_r = yield from m1.sys_qreg_mr(nbytes + 4096)
-        wr = WorkRequest(op="WRITE", wr_id=1, local_mr=mr, local_off=0,
-                         remote_rkey=mr_r.rkey, remote_off=0,
-                         nbytes=nbytes)
-        yield from m0.sys_qpush(qd, [wr])
-        yield from m0.qpop_block(qd)
-        res["kr"] = env.now - t0
-        return True
+# ---- TestCase5: a 3-stage chain epoch over the staged batched hop
+print("\n== 3-stage chain epoch (extract -> transform -> load) ==")
+K, payload_bytes = 32, 1024
+cluster = make_cluster(n_nodes=3, n_meta=1)
+registry = default_registry(payload_bytes=payload_bytes)
+pool = ContainerPool(cluster, "krcore", warm_target=4)
+runner = ChainRunner(cluster, registry, pool, "krcore", slab_payloads=16)
+rng = np.random.RandomState(7)
+payloads = [rng.randint(0, 256, payload_bytes).astype(np.uint8)
+            for _ in range(K)]
+names = ("extract", "transform", "load")
 
-    env.run_process(kr_fn(), "kr")
 
-    cluster2 = make_cluster(n_nodes=2, n_meta=1)
-    env2 = cluster2.env
+def epoch():
+    return (yield from runner.run_batch(names, ["n0", "n1", "n2"],
+                                        K, payloads))
 
-    def verbs_fn():
-        t0 = env2.now
-        p = VerbsProcess(cluster2.node("n0"))
-        yield from p.connect(cluster2.node("n1"))
-        mr = yield from p.reg_mr(nbytes + 4096)
-        node1 = cluster2.node("n1")
-        mr_r = node1.reg_mr(node1.alloc(nbytes + 4096), nbytes + 4096)
-        qp = p.qps["n1"]
-        qp.post_send([WorkRequest(op="WRITE", wr_id=1, signaled=True,
-                                  local_mr=mr, local_off=0,
-                                  remote_rkey=mr_r.rkey, remote_off=0,
-                                  nbytes=nbytes)])
-        while not qp.poll_cq():
-            yield env2.timeout(0.1)
-        res["vb"] = env2.now - t0
-        return True
 
-    env2.run_process(verbs_fn(), "vb")
-    print(f"{nbytes:6d}B  KRCORE {res['kr']:8.1f}us   "
-          f"Verbs {res['vb']:10.1f}us   "
-          f"reduction {100*(1-res['kr']/res['vb']):.1f}%  (paper: 99%)")
+report = cluster.env.run_process(epoch(), "epoch")
+ok = all(np.array_equal(a, b) for a, b in zip(
+    report.outputs, expected_outputs(registry, names, payloads)))
+print(f"K={K} invocations, payload={payload_bytes}B, "
+      f"outputs byte-exact: {ok}")
+print(f"total={report.total_us:.1f}us  transfer={report.transfer_us:.1f}us")
+for h in report.hops:
+    print(f"  hop {h.src}->{h.dst}: {h.groups} slabs, {h.doorbells} "
+          f"doorbell(s) (vs {K} per-message), pack={h.pack_us:.1f}us "
+          f"send={h.send_us:.1f}us drain={h.drain_us:.1f}us")
+for s in report.stages:
+    print(f"  stage {s.name}@{s.node}: cold={s.cold} warm={s.warm} "
+          f"fork_wall={s.fork_wall_us:.0f}us "
+          f"compute_wall={s.compute_wall_us:.0f}us")

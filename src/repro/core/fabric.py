@@ -194,32 +194,51 @@ class Fabric:
 
     def send_msg(self, src: Node, dst: Node, dst_qpn: int,
                  payload: np.ndarray, header: dict,
-                 dct: bool = False, dct_connect: bool = False) -> Generator:
-        """Two-sided SEND: deliver (header, payload) to dst mailbox ``qpn``."""
+                 dct: bool = False, dct_connect: bool = False,
+                 prev=None, done=None) -> Generator:
+        """Two-sided SEND: deliver (header, payload) to dst mailbox ``qpn``.
+
+        ``prev``/``done`` implement per-QP send FIFO (RC/DC ordering
+        guarantee): transit is pipelined, but delivery into the mailbox
+        waits for the QP's previous SEND to deliver first — a later
+        message of the same doorbell batch can never overtake an earlier
+        one whose first packet was delayed (e.g. by a DCT reconnect).
+        ``done`` fires once this message has delivered (or failed), so
+        the chain never deadlocks on an errored send.
+        """
         cm = self.cm
         nbytes = int(payload.size)
         extra = cm.dct_op_extra_us if dct else 0.0
         if dct_connect:
             extra += cm.dct_connect_us
-        if not dst.alive:
-            yield self.env.timeout(12.0)
-            raise MRError(f"{dst.name} unreachable (node down)")
-        yield from self._engine(src, cm.nic_op_us + extra)
-        yield self.env.timeout(cm.wire_us + cm.payload_us(nbytes))
-        yield from self._engine(dst, cm.nic_op_us + cm.payload_us(nbytes))
-        box = dst.mailboxes.get(dst_qpn)
-        if box is None:
-            raise FabricError(f"{dst.name}: no mailbox qpn={dst_qpn}")
-        box.put((dict(header), payload.copy()))
-        src.stat_bytes_tx += nbytes
-        dst.stat_bytes_rx += nbytes
+        try:
+            if not dst.alive:
+                yield self.env.timeout(12.0)
+                raise MRError(f"{dst.name} unreachable (node down)")
+            yield from self._engine(src, cm.nic_op_us + extra)
+            yield self.env.timeout(cm.wire_us + cm.payload_us(nbytes))
+            yield from self._engine(dst, cm.nic_op_us
+                                    + cm.payload_us(nbytes))
+            if prev is not None and not prev.triggered:
+                yield prev                       # per-QP FIFO delivery
+            box = dst.mailboxes.get(dst_qpn)
+            if box is None:
+                raise FabricError(f"{dst.name}: no mailbox qpn={dst_qpn}")
+            box.put((dict(header), payload.copy()))
+            src.stat_bytes_tx += nbytes
+            dst.stat_bytes_rx += nbytes
+        finally:
+            if done is not None and not done.triggered:
+                done.succeed()
 
     def ud_send(self, src: Node, dst: Node, dst_qpn: int,
-                payload: np.ndarray, header: dict) -> Generator:
+                payload: np.ndarray, header: dict,
+                prev=None, done=None) -> Generator:
         """Connectionless datagram (UD): like send, capped at the MTU."""
         if payload.size > self.cm.ud_mtu:
             raise FabricError("UD payload exceeds MTU")
-        yield from self.send_msg(src, dst, dst_qpn, payload, header)
+        yield from self.send_msg(src, dst, dst_qpn, payload, header,
+                                 prev=prev, done=done)
 
     # ------------------------------------------------------ control (NIC)
     def nic_create_qp(self, node: Node) -> Generator:

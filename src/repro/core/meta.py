@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 import struct
 import time
-from typing import Dict, Generator, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
@@ -149,7 +150,15 @@ class KVClient:
         """Batched lookup: returns ``List[Optional[bytes]]`` aligned with
         ``keys``. Each round posts ONE doorbell batch carrying one probe
         READ per still-unresolved key (only the last WR signaled -> one
-        CQE per batch); only collided keys advance to the next round."""
+        CQE per batch); only collided keys advance to the next round.
+
+        Rounds are PIPELINED through two scratch banks: round r+1 (the
+        next chunk of pending keys, including any collision re-probes
+        already resolved) is posted behind round r's doorbell while r is
+        still in flight, instead of synchronizing per chunk. CQEs of a
+        FIFO QP complete in posting order, so the oldest in-flight bank
+        is always the one a polled CQE retires.
+        """
         results: List[Optional[bytes]] = [None] * len(keys)
         if not keys:
             return results
@@ -159,30 +168,47 @@ class KVClient:
                   self.qp.sq_depth, self.qp.cq_depth - 1)
         if cap < 1:
             raise ValueError("scratch too small for batched lookup")
+        n_banks = 2 if cap >= 2 else 1
+        bank_cap = cap // n_banks
+        free_banks = deque(range(n_banks))
+        inflight: Deque[Tuple[List[Tuple[int, int]], int]] = deque()
         pending: List[Tuple[int, int]] = [(i, 0) for i in range(len(keys))]
-        while pending:
-            chunk, pending = pending[:cap], pending[cap:]
-            wrs = []
-            for j, (i, probe) in enumerate(chunk):
-                idx = (hashes[i] + probe) % self.server.n_slots
-                wrs.append(WorkRequest(
-                    op="READ", wr_id=0x4D42, signaled=(j == len(chunk) - 1),
-                    local_mr=self.scratch_mr,
-                    local_off=self.batch_scratch_off + j * SLOT,
-                    remote_rkey=self.server.mr.rkey, remote_off=idx * SLOT,
-                    nbytes=SLOT, dst=self.server.node.name))
-            self.qp.post_send(wrs)
+        failed = False
+        while pending or inflight:
+            if pending and free_banks and not failed:
+                bank = free_banks.popleft()
+                chunk, pending = pending[:bank_cap], pending[bank_cap:]
+                wrs = []
+                for j, (i, probe) in enumerate(chunk):
+                    idx = (hashes[i] + probe) % self.server.n_slots
+                    wrs.append(WorkRequest(
+                        op="READ", wr_id=0x4D42,
+                        signaled=(j == len(chunk) - 1),
+                        local_mr=self.scratch_mr,
+                        local_off=self.batch_scratch_off
+                        + (bank * bank_cap + j) * SLOT,
+                        remote_rkey=self.server.mr.rkey,
+                        remote_off=idx * SLOT,
+                        nbytes=SLOT, dst=self.server.node.name))
+                self.qp.post_send(wrs)
+                inflight.append((chunk, bank))
+                continue                      # post before polling
             while True:                       # one CQE covers the batch
                 cqes = self.qp.poll_cq()
                 if cqes:
                     break
                 yield env.timeout(0.05)
+            chunk, bank = inflight.popleft()
+            free_banks.append(bank)
             if cqes[0].status != "OK":
-                return results                # server down / MR revoked
+                failed = True                 # server down / MR revoked:
+                pending = []                  # drain in-flight, then stop
+                continue
             for j, (i, probe) in enumerate(chunk):
                 raw = self.qp.node.read_bytes(
                     self.scratch_mr.addr,
-                    self.batch_scratch_off + j * SLOT, SLOT)
+                    self.batch_scratch_off + (bank * bank_cap + j) * SLOT,
+                    SLOT)
                 k, val = DrTMKV.parse_slot(raw)
                 if k == hashes[i]:
                     results[i] = val
@@ -311,3 +337,12 @@ class MRStore:
     def put(self, remote: str, rkey: int, addr: int, length: int) -> None:
         self._maybe_flush()
         self._cache[(remote, rkey)] = (addr, length)
+
+    def invalidate_remote(self, remote: str) -> int:
+        """Drop every checked-MR entry of one remote (node-death handling:
+        a dead node's registrations must not survive as cache hits when a
+        restarted instance reuses its name). Returns entries dropped."""
+        stale = [k for k in self._cache if k[0] == remote]
+        for k in stale:
+            del self._cache[k]
+        return len(stale)

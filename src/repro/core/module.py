@@ -71,6 +71,8 @@ class KRCoreModule:
         self._staged: Dict[int, deque] = {}
         # zero-copy descriptors waiting for a user buffer
         self._staged_zc: Dict[int, deque] = {}
+        # (src, src_vq, listener_vq) -> reply qd (accept-semantics cache)
+        self._reply_qds: Dict[Tuple[str, int, int], int] = {}
         self._promotions_inflight: set = set()
         self.booted = False
         # stats
@@ -398,6 +400,12 @@ class KRCoreModule:
                 req.wr_id = encode_wr_id(vq.id, unsignaled_cnt + 1)
                 unsignaled_cnt = 0
             else:
+                # unsignaled WRs also carry vq ownership (comp_cnt == 0 is
+                # the unsignaled marker: an OK CQE is never generated for
+                # them, so the only CQE carrying this encoding is an ERR
+                # completion — which _qpop_inner can now route to the
+                # owning VirtQueue instead of dropping it on the floor)
+                req.wr_id = encode_wr_id(vq.id, 0)
                 unsignaled_cnt += 1
         last = wr_list[-1]
         if not last.signaled:
@@ -453,8 +461,14 @@ class KRCoreModule:
         yield from self._drain_staged(vq)
         return 0
 
-    def sys_qpop_msgs(self, qd: int) -> Generator:
+    def sys_qpop_msgs(self, qd: int,
+                      max_n: Optional[int] = None) -> Generator:
         """qpop_msgs: poll received messages; returns list of PolledMsg.
+
+        ONE syscall crossing drains up to ``max_n`` queued messages (all
+        of them when ``max_n`` is None) — the recv-side analogue of
+        ``qpop_batch``, so a whole SEND doorbell batch is consumed with a
+        single kernel crossing.
 
         Each message carries ``reply_qd`` — a VirtQueue already connected
         back to the sender (accept semantics, §4.1), built from the DCT
@@ -464,7 +478,7 @@ class KRCoreModule:
         vq = self._vq(qd)
         yield self.env.timeout(self.cm.syscall_us)
         out: List[PolledMsg] = []
-        while vq.msg_queue:
+        while vq.msg_queue and (max_n is None or len(out) < max_n):
             out.append(vq.msg_queue.popleft())
         return out
 
@@ -586,22 +600,30 @@ class KRCoreModule:
                 vq_id, comp_cnt = decode_wr_id(cqe.wr_id)
                 # hardware covers == encoded comp_cnt (see qp.py) — the
                 # assert is a free cross-check of the Alg.2 accounting.
-                assert cqe.covers == max(comp_cnt, 1) or cqe.status != "OK", \
+                # comp_cnt == 0 marks an unsignaled WR (only its ERR CQE
+                # ever reaches here); a prior ERR CQE may also have split
+                # a coverage run mid-batch, so go lenient once one exists.
+                assert (cqe.covers == max(comp_cnt, 1) or comp_cnt == 0
+                        or cqe.status != "OK" or qp.stat_err_cqes), \
                     (cqe.covers, comp_cnt)
                 if vq_id:
                     target = self.vqs.get(vq_id)
                     if target is not None:
                         ent = target.mark_ready()
                         # software covers bookkeeping must mirror hardware
-                        # — except after an ERR CQE of an unsignaled WR has
-                        # split a coverage run mid-batch (the vq.errored
-                        # path handles that case)
-                        assert (ent is None or cqe.status != "OK"
+                        # — except for unsignaled-WR ERR CQEs (comp_cnt 0:
+                        # the marked entry is the *covering* signaled one)
+                        # or after an ERR CQE has split a coverage run
+                        # mid-batch (the vq.errored path handles that)
+                        assert (ent is None or comp_cnt == 0
+                                or cqe.status != "OK"
                                 or qp.stat_err_cqes
                                 or ent.covers == cqe.covers), \
                             (ent.covers, cqe.covers)
                         if cqe.status != "OK":
                             target.errored = True
+                            if ent is not None:
+                                ent.err = True
                 if cqe.status != "OK" and qp.state == QPState.ERR:
                     self.env.process(self._recover(qp),
                                      f"{self.node.name}.recover")
@@ -615,9 +637,11 @@ class KRCoreModule:
 
     def _drain_staged(self, vq: VirtQueue) -> Generator:
         staged = self._staged.get(vq.id)
-        while staged and vq.recv_queue:
-            header, payload = staged.popleft()
-            yield from self._deliver_small(vq, header, payload)
+        if staged and vq.recv_queue:
+            items: List[Tuple[dict, np.ndarray]] = []
+            while staged and len(items) < len(vq.recv_queue):
+                items.append(staged.popleft())
+            yield from self._deliver_data_run(vq, items)
         staged_zc = self._staged_zc.get(vq.id)
         while staged_zc and vq.recv_queue:
             header = staged_zc.popleft()
@@ -625,26 +649,79 @@ class KRCoreModule:
 
     # =============================================== receive pump & dispatch
     def _recv_pump(self, qp: QP) -> Generator:
+        """Batched receive pump (ROADMAP open item: batched two-sided path).
+
+        One wake drains EVERY available recv CQE in bulk: payloads are
+        copied out of the kernel slab and the slots recycled + re-posted
+        BEFORE dispatch (so a SEND burst larger than the pre-posted window
+        keeps landing while earlier messages are still being delivered),
+        then the whole batch is dispatched with consecutive same-queue
+        DATA runs merged into one delivery (single aggregated memcpy
+        charge) instead of one kernel pass per message.
+        """
         while True:
             yield qp.recv_notify.get()
-            for cqe in qp.poll_recv_cq(max_n=16):
-                self._post_kernel_recv(qp)       # replenish the slab slot
-                header = cqe.header or {}
-                kind = header.get("kind", "DATA")
-                payload = self.node.read_bytes(
-                    self._kernel_slab_mr.addr, cqe.wr_id,
-                    min(cqe.byte_len, self.cm.kernel_msg_buf_bytes))
-                if kind == "DATA":
-                    yield from self._on_data(header, payload[:cqe.byte_len])
-                elif kind == "ZC_DESC":
-                    yield from self._on_zc_desc(header)
-                elif kind == "XFER_NOTIFY":
-                    yield from self._on_xfer_notify(header)
-                elif kind == "XFER_ACK":
-                    self._on_xfer_ack(header)
-                elif kind == "FLUSH":
-                    pass                          # transfer-protocol no-op
-                self._slab_slots.append(cqe.wr_id)
+            while len(qp.recv_notify):         # collapse burst notifies
+                yield qp.recv_notify.get()
+            while True:
+                cqes = qp.poll_recv_cq(max_n=KERNEL_RECV_SLOTS)
+                if not cqes:
+                    break
+                msgs: List[Tuple[dict, np.ndarray]] = []
+                for cqe in cqes:
+                    header = cqe.header or {}
+                    payload = self.node.read_bytes(
+                        self._kernel_slab_mr.addr, cqe.wr_id,
+                        min(cqe.byte_len, self.cm.kernel_msg_buf_bytes))
+                    msgs.append((header, payload[:cqe.byte_len]))
+                    self._slab_slots.append(cqe.wr_id)
+                for _ in cqes:                 # bulk slab replenish
+                    self._post_kernel_recv(qp)
+                yield from self._dispatch_batch(msgs)
+
+    def _dispatch_batch(self,
+                        msgs: List[Tuple[dict, np.ndarray]]) -> Generator:
+        """Dispatch a drained CQE batch. Only ADJACENT messages routed to
+        the same VirtQueue are merged, so per-queue FIFO order — and the
+        relative order of DATA vs. control messages on one queue — is
+        exactly what per-message dispatch would have produced."""
+        i = 0
+        while i < len(msgs):
+            header, payload = msgs[i]
+            if header.get("kind", "DATA") != "DATA":
+                yield from self._dispatch_control(header)
+                i += 1
+                continue
+            self._learn_sender(header)
+            vq = self._route_incoming(header)
+            j = i + 1
+            while j < len(msgs):
+                h2 = msgs[j][0]
+                if h2.get("kind", "DATA") != "DATA" \
+                        or self._route_incoming(h2) is not vq:
+                    break
+                self._learn_sender(h2)
+                j += 1
+            if vq is not None:                 # no listener: drop the run
+                staged = self._staged.get(vq.id)
+                if staged:
+                    # earlier messages are still kernel-staged waiting
+                    # for user buffers: queue behind them (FIFO) — a new
+                    # run must never overtake the staged backlog
+                    staged.extend(msgs[i:j])
+                else:
+                    yield from self._deliver_data_run(vq, msgs[i:j])
+            i = j
+
+    def _dispatch_control(self, header: dict) -> Generator:
+        kind = header.get("kind")
+        if kind == "ZC_DESC":
+            yield from self._on_zc_desc(header)
+        elif kind == "XFER_NOTIFY":
+            yield from self._on_xfer_notify(header)
+        elif kind == "XFER_ACK":
+            self._on_xfer_ack(header)
+        # "FLUSH": transfer-protocol no-op
 
     def _route_incoming(self, header: dict) -> Optional[VirtQueue]:
         vq_id = header.get("dst_vq")
@@ -662,27 +739,36 @@ class KRCoreModule:
         if dct and src:
             self.dccache.put(src, DCTMeta(*dct))
 
-    def _on_data(self, header: dict, payload: np.ndarray) -> Generator:
-        self._learn_sender(header)
-        vq = self._route_incoming(header)
-        if vq is None:
-            return                                 # no listener: drop
-        if vq.recv_queue:
-            yield from self._deliver_small(vq, header, payload)
-        else:
-            self._staged.setdefault(vq.id, deque()).append((header, payload))
+    def _deliver_data_run(self, vq: VirtQueue,
+                          items: List[Tuple[dict, np.ndarray]]) -> Generator:
+        """Deliver a FIFO run of small DATA messages to one VirtQueue.
 
-    def _deliver_small(self, vq: VirtQueue, header: dict,
-                       payload: np.ndarray) -> Generator:
-        """memcpy kernel buffer -> user buffer (the §4.5 baseline path)."""
-        ent = vq.recv_queue.popleft()
-        n = min(len(payload), ent.length)
-        yield self.env.timeout(self.cm.memcpy_us(n))
-        self.node.write_bytes(ent.mr.addr, ent.offset, payload[:n])
-        vq.msg_queue.append(PolledMsg(
-            reply_qd=self._make_reply_qd(header, vq),
-            wr_id=ent.wr_id, byte_len=n,
-            src=header.get("src", "?"), src_vq=header.get("src_vq", 0)))
+        Every message with a posted user buffer is copied in ONE
+        aggregated kernel pass (a single memcpy charge over the run's
+        total bytes — the batched analogue of the §4.5 baseline path);
+        messages beyond the posted buffers are kernel-staged until
+        qpush_recv supplies more.
+        """
+        n_buf = len(vq.recv_queue)
+        now, later = items[:n_buf], items[n_buf:]
+        if now:
+            run = []
+            total = 0
+            for header, payload in now:
+                ent = vq.recv_queue.popleft()
+                n = min(len(payload), ent.length)
+                total += n
+                run.append((ent, header, payload, n))
+            yield self.env.timeout(self.cm.memcpy_us(total))
+            for ent, header, payload, n in run:
+                self.node.write_bytes(ent.mr.addr, ent.offset, payload[:n])
+                vq.msg_queue.append(PolledMsg(
+                    reply_qd=self._make_reply_qd(header, vq),
+                    wr_id=ent.wr_id, byte_len=n,
+                    src=header.get("src", "?"),
+                    src_vq=header.get("src_vq", 0)))
+        for header, payload in later:
+            self._staged.setdefault(vq.id, deque()).append((header, payload))
 
     def _on_zc_desc(self, header: dict) -> Generator:
         self._learn_sender(header)
@@ -717,9 +803,23 @@ class KRCoreModule:
 
     def _make_reply_qd(self, header: dict, listener: VirtQueue) -> int:
         """accept semantics: a VirtQueue connected back to the sender, built
-        from piggybacked metadata — zero network ops (§4.4)."""
+        from piggybacked metadata — zero network ops (§4.4). Cached per
+        (sender, sender-vq, listener) so a batched SEND stream reuses ONE
+        reply queue instead of minting one per message."""
         src = header.get("src")
         src_vq = header.get("src_vq", 0)
+        key = (src, src_vq, listener.id)
+        cached = self._reply_qds.get(key)
+        if cached is not None and cached in self.vqs:
+            rvq = self.vqs[cached]
+            if rvq.kind == "DC":
+                # _learn_sender just refreshed the DCCache from this
+                # message's piggybacked metadata — don't serve a stale
+                # snapshot if the sender reconnected with a new DCT
+                meta = self.dccache.get(src)
+                if meta is not None:
+                    rvq.dct_meta, rvq.remote_qpn = meta, meta.dct_num
+            return cached
         vq = VirtQueue(owner_cpu=listener.owner_cpu)
         self.vqs[vq.id] = vq
         pool = self.pools[vq.owner_cpu % len(self.pools)]
@@ -732,6 +832,7 @@ class KRCoreModule:
             meta = self.dccache.get(src)
             vq.dct_meta = meta
             vq.remote_qpn = meta.dct_num if meta else None
+        self._reply_qds[key] = vq.id
         return vq.id
 
     # ======================================================== transfer (§4.6)
@@ -858,6 +959,29 @@ class KRCoreModule:
             vq = self.vqs[vq_id]
             vq.old_qp = None
             vq.in_transfer = False
+
+    # ====================================================== failure handling
+    def on_node_death(self, addr: str) -> None:
+        """Invalidate every cache keyed by a dead peer (§4.2 failure
+        handling): its DCT metadata (DCCache), its checked remote MRs
+        (MRStore), and any cached RCQP to it — so the next qconnect
+        re-resolves through the (replicated) meta service instead of
+        talking to a ghost. Called by failover-aware applications (e.g.
+        the serverless chain runner) when an in-flight request against
+        ``addr`` returns an ERR completion.
+        """
+        self.dccache.invalidate(addr)
+        self.mrstore.invalidate_remote(addr)
+        for pool in self.pools:
+            pool.drop_rc(addr)
+            pool.use_counts.pop(addr, None)
+        ivqs = getattr(self, "_ivqs", None)
+        if ivqs is not None:
+            ivqs.pop(addr, None)
+        # reply-qd cache entries hold the dead peer's DCT metadata frozen
+        # at creation; drop them so a restarted peer gets fresh reply vqs
+        for key in [k for k in self._reply_qds if k[0] == addr]:
+            self.vqs.pop(self._reply_qds.pop(key), None)
 
     # ========================================================== accounting
     def memory_bytes(self) -> int:

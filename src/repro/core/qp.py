@@ -129,6 +129,9 @@ class QP:
         self._uncovered = 0        # completed-but-not-CQE'd (unsignaled) WRs
         # mailbox for two-sided delivery
         self.mailbox = Store(self.env)
+        #: tail of the per-QP send-FIFO chain (RC/DC ordering: a SEND's
+        #: delivery waits for the previous SEND's delivery event)
+        self._send_fifo_tail = None
         #: tokens pushed whenever a recv CQE is generated (event-driven pumps)
         self.recv_notify = Store(self.env)
         node.mailboxes[self.qpn] = self.mailbox
@@ -136,6 +139,10 @@ class QP:
         # stats
         self.stat_posted = 0
         self.stat_completed = 0
+        #: doorbell rings (= post_send calls). The batched data plane's
+        #: whole point is stat_posted >> stat_doorbells; the serverless
+        #: chain tests pin "<= ceil(K/slab) doorbells per hop" on this.
+        self.stat_doorbells = 0
         #: ERR CQEs generated so far; once nonzero, selective-signaling
         #: coverage runs may have been split by mid-run error CQEs, so
         #: software covers cross-checks must go lenient
@@ -203,6 +210,7 @@ class QP:
             if wr.op not in VALID_OPS:
                 self._to_error(f"bad opcode {wr.op}")
                 raise QPError(f"QP{self.qpn} invalid opcode {wr.op!r}")
+        self.stat_doorbells += 1
         for wr in wrs:
             self.sq_occupancy += 1
             self.stat_posted += 1
@@ -264,13 +272,20 @@ class QP:
                 header.setdefault("src_qpn", self.qpn)
                 payload = wr.payload if wr.payload is not None else \
                     np.zeros(0, dtype=np.uint8)
+                # per-QP send FIFO: chain this delivery behind the
+                # previous SEND's (transit still pipelines; see fabric)
+                prev, self._send_fifo_tail = \
+                    self._send_fifo_tail, self.env.event()
+                done = self._send_fifo_tail
                 if self.qptype == QPType.UD:
                     yield from self.fabric.ud_send(
-                        self.node, dst, dst_qpn, payload, header)
+                        self.node, dst, dst_qpn, payload, header,
+                        prev=prev, done=done)
                 else:
                     yield from self.fabric.send_msg(
                         self.node, dst, dst_qpn, payload, header,
-                        dct=dct, dct_connect=reconnect)
+                        dct=dct, dct_connect=reconnect,
+                        prev=prev, done=done)
         except MRError:
             status = "ERR"
             if seq >= self._next_complete:

@@ -1,10 +1,14 @@
 """Pallas TPU kernels for the compute hot-spots (each with ops.py jit
 wrapper and ref.py pure-jnp oracle; validated in interpret mode on CPU):
 
-  race_lookup/     batched one-sided KV lookup over a RACE hash table in
-                   device memory (the meta-server / DrTM-KV data path —
-                   the TPU analogue of the paper's one-sided RDMA READ)
-  flash_attention/ blockwise causal GQA attention w/ sliding window and
-                   logit softcap (serving/training hot spot)
-  rwkv6/           chunked data-dependent-decay WKV scan (rwkv6-7b)
+  race_lookup/      batched one-sided KV lookup over a RACE hash table in
+                    device memory (the meta-server / DrTM-KV data path —
+                    the TPU analogue of the paper's one-sided RDMA READ)
+  serverless_stage/ chunk-granular payload scatter/gather: packs K ragged
+                    function payloads into one contiguous MR slab (and
+                    unpacks on the receiver) so a serverless chain hop
+                    issues ceil(K/slab) doorbells instead of K
+  flash_attention/  blockwise causal GQA attention w/ sliding window and
+                    logit softcap (serving/training hot spot)
+  rwkv6/            chunked data-dependent-decay WKV scan (rwkv6-7b)
 """

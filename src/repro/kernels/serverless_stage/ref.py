@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the payload-staging (chunk gather) kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def chunk_gather_ref(src, src_row, valid, *, chunk: int = 128):
+    """Same contract as ``chunk_gather_pallas``: out[j] is src[src_row[j]]
+    with lanes >= valid[j] zeroed."""
+    nout = src_row.shape[0]
+    if nout == 0:
+        return jnp.zeros((0, chunk), jnp.int32)
+    gathered = jnp.asarray(src)[jnp.asarray(src_row)]      # (NOUT, chunk)
+    lane = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+    return jnp.where(lane < jnp.asarray(valid)[:, None], gathered, 0)
+
+
+def pack_ref(payloads: np.ndarray, lengths: np.ndarray,
+             *, chunk: int = 128) -> np.ndarray:
+    """Dense-numpy oracle of the full pack. Slab layout is chunk-aligned:
+    payload i occupies ceil(lengths[i]/chunk) consecutive slab chunks
+    (tail chunk zero-padded), in key order."""
+    rows = []
+    for i, n in enumerate(np.asarray(lengths)):
+        n = int(n)
+        n_chunks = -(-n // chunk)
+        row = np.zeros(n_chunks * chunk, np.int32)
+        row[:n] = np.asarray(payloads[i, :n], np.int32)
+        rows.append(row.reshape(-1, chunk))
+    if not rows:
+        return np.zeros((0, chunk), np.int32)
+    return np.concatenate(rows, axis=0)

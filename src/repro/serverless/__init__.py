@@ -1,0 +1,30 @@
+"""Fn-style serverless runtime on the KRCore control plane (paper §5.3.2).
+
+Module map (see README.md for the paper-figure mapping):
+
+  registry.py   FunctionDef / FunctionRegistry — the deployable catalog
+  container.py  warm/cold sandboxes with background prewarm (the
+                HybridQPPool / ExecutablePool now-vs-later policy)
+  gateway.py    open-loop trace admission + least-outstanding placement
+  chain.py      A->B->C pipelines; staged slab hops over qpush_batch vs.
+                the VerbsProcess / LiteKernel baselines; mid-chain
+                failover via KRCoreModule.on_node_death
+  traces.py     synthetic Poisson / spike / diurnal arrival processes
+"""
+
+from .chain import (ChainReport, ChainRunner, HopStat, StageStat,
+                    decode_slab, encode_slab, expected_outputs,
+                    slab_capacity_bytes)
+from .container import Container, ContainerPool, LeaseStats
+from .gateway import (InvocationGateway, InvocationRecord,
+                      LeastOutstandingScheduler)
+from .registry import FunctionDef, FunctionRegistry, default_registry
+from .traces import diurnal_trace, poisson_trace, spike_trace
+
+__all__ = [
+    "ChainReport", "ChainRunner", "HopStat", "StageStat", "decode_slab",
+    "encode_slab", "expected_outputs", "slab_capacity_bytes", "Container",
+    "ContainerPool", "LeaseStats", "InvocationGateway", "InvocationRecord",
+    "LeastOutstandingScheduler", "FunctionDef", "FunctionRegistry",
+    "default_registry", "diurnal_trace", "poisson_trace", "spike_trace",
+]

@@ -1,0 +1,208 @@
+"""Invocation gateway + scheduler: open-loop trace admission on the DES.
+
+The gateway is the Fn front door: a trace (see :mod:`.traces`) is admitted
+open-loop — arrivals fire at their trace timestamps regardless of how far
+behind the fleet is — and every invocation is placed on a worker node by
+the scheduler, leased a container (warm or cold, :mod:`.container`),
+optionally pulls its input payload from a data node over the container's
+transport, runs, and is released back to the warm pool.
+
+Every record decomposes the invocation the way Fig 12a/12b decompose a
+request: queueing, fork (container), control plane (connect + MR), data
+plane (payload movement), compute. The benchmarks aggregate these into the
+paper's headline ratios; the tests pin the open-loop and placement
+invariants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Generator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import WorkRequest
+from repro.core.cluster import Cluster
+
+from .container import Container, ContainerPool
+from .registry import FunctionDef, FunctionRegistry
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    inv_id: int
+    fn: str
+    node: str
+    kind: str                     # "warm" | "cold"
+    arrival_us: float
+    start_us: float = 0.0
+    end_us: float = 0.0
+    fork_us: float = 0.0
+    control_us: float = 0.0
+    data_us: float = 0.0
+    compute_us: float = 0.0
+
+    @property
+    def queue_us(self) -> float:
+        return self.start_us - self.arrival_us
+
+    @property
+    def total_us(self) -> float:
+        return self.end_us - self.arrival_us
+
+
+class LeastOutstandingScheduler:
+    """Place each invocation on the worker with the fewest in-flight
+    invocations (ties broken round-robin for determinism)."""
+
+    def __init__(self, nodes: Sequence[str]):
+        if not nodes:
+            raise ValueError("scheduler needs at least one node")
+        self.nodes = list(nodes)
+        self.outstanding: Dict[str, int] = {n: 0 for n in self.nodes}
+        self._rr = 0
+
+    def place(self) -> str:
+        lo = min(self.outstanding.values())
+        candidates = [n for n in self.nodes if self.outstanding[n] == lo]
+        node = candidates[self._rr % len(candidates)]
+        self._rr += 1
+        self.outstanding[node] += 1
+        return node
+
+    def done(self, node: str) -> None:
+        self.outstanding[node] = max(0, self.outstanding[node] - 1)
+
+
+class InvocationGateway:
+    """Admit traces, place invocations, account every phase."""
+
+    def __init__(self, cluster: Cluster, registry: FunctionRegistry,
+                 pool: ContainerPool,
+                 worker_nodes: Optional[Sequence[str]] = None,
+                 data_node: Optional[str] = None):
+        self.cluster = cluster
+        self.env = cluster.env
+        self.registry = registry
+        self.pool = pool
+        names = worker_nodes or sorted(cluster.modules)
+        self.scheduler = LeastOutstandingScheduler(names)
+        #: node holding invocation input payloads (None: skip the fetch)
+        self.data_node = data_node
+        self._data_mr = None
+        self.records: List[InvocationRecord] = []
+        self._next_id = 0
+
+    # ----------------------------------------------------------- plumbing
+    def _ensure_data_mr(self) -> Generator:
+        """Input-payload region on the data node, registered once."""
+        if self._data_mr is None and self.data_node is not None:
+            mod = self.cluster.module(self.data_node)
+            self._data_mr = yield from mod.sys_qreg_mr(1 << 20)
+        return self._data_mr
+
+    # ----------------------------------------------------------- admission
+    def submit_trace(self, fn_name: str, arrivals: Sequence[float],
+                     payload_bytes: int = 1024) -> Generator:
+        """Open-loop admission: spawn one invocation process per arrival
+        at its trace timestamp; returns when all have completed."""
+        fn = self.registry.get(fn_name)
+        yield from self._ensure_data_mr()
+        base = self.env.now
+        procs = []
+        for t in arrivals:
+            procs.append(self.env.process(
+                self._invoke_at(fn, base + float(t), payload_bytes,
+                                self._next_id),
+                f"inv.{self._next_id}"))
+            self._next_id += 1
+        for p in procs:
+            yield p
+        return [p.value for p in procs]
+
+    def _invoke_at(self, fn: FunctionDef, when: float,
+                   payload_bytes: int, inv_id: int) -> Generator:
+        env = self.env
+        if when > env.now:
+            yield env.timeout(when - env.now)
+        rec = InvocationRecord(inv_id=inv_id, fn=fn.name, node="?",
+                               kind="?", arrival_us=env.now)
+        node = self.scheduler.place()
+        rec.node = node
+        rec.start_us = env.now
+        try:
+            t0 = env.now
+            kind, container = yield from self.pool.lease(node, fn)
+            rec.kind = kind
+            rec.fork_us = env.now - t0
+            if self.data_node is not None and self.data_node != node:
+                yield from self._fetch_input(container, rec, payload_bytes)
+            t0 = env.now
+            yield env.timeout(fn.compute_us)
+            rec.compute_us = env.now - t0
+            self.pool.release(container)
+        finally:
+            self.scheduler.done(node)
+        rec.end_us = env.now
+        self.records.append(rec)
+        return rec
+
+    def _fetch_input(self, container: Container, rec: InvocationRecord,
+                     payload_bytes: int) -> Generator:
+        """Pull the invocation's input from the data node over the
+        container's transport (control plane on miss, then data plane)."""
+        env = self.env
+        t0 = env.now
+        handle = yield from container.connect(self.data_node)
+        rec.control_us = env.now - t0
+        t0 = env.now
+        nbytes = min(payload_bytes, container.mr.length)
+        if container.transport == "krcore":
+            mod = container.module
+            wr = WorkRequest(op="READ", wr_id=1, local_mr=container.mr,
+                             local_off=0, remote_rkey=self._data_mr.rkey,
+                             remote_off=0, nbytes=nbytes)
+            rc = yield from mod.sys_qpush(handle, [wr])
+            if rc != 0:
+                raise RuntimeError("input fetch rejected")
+            ent = yield from mod.qpop_block(handle)
+            if ent.err:
+                raise RuntimeError("input fetch errored")
+        else:
+            qp = handle
+            qp.post_send([WorkRequest(
+                op="READ", wr_id=1, signaled=True, local_mr=container.mr,
+                local_off=0, remote_rkey=self._data_mr.rkey,
+                remote_off=0, nbytes=nbytes)])
+            while not qp.poll_cq():
+                yield env.timeout(0.1)
+        rec.data_us = env.now - t0
+
+    # ------------------------------------------------------------- reports
+    def summary(self) -> Dict[str, float]:
+        """Aggregate stats over all completed records."""
+        if not self.records:
+            return {"n": 0}
+        tot = np.array([r.total_us for r in self.records])
+        cold = [r for r in self.records if r.kind == "cold"]
+        warm = [r for r in self.records if r.kind == "warm"]
+        out = {
+            "n": len(self.records),
+            "p50_us": float(np.percentile(tot, 50)),
+            "p99_us": float(np.percentile(tot, 99)),
+            "mean_us": float(tot.mean()),
+            "cold": len(cold),
+            "warm": len(warm),
+            "warm_ratio": len(warm) / len(self.records),
+            "mean_fork_us": float(np.mean(
+                [r.fork_us for r in self.records])),
+            "mean_control_us": float(np.mean(
+                [r.control_us for r in self.records])),
+            "mean_data_us": float(np.mean(
+                [r.data_us for r in self.records])),
+        }
+        per_node: Dict[str, int] = {}
+        for r in self.records:
+            per_node[r.node] = per_node.get(r.node, 0) + 1
+        out["max_node_share"] = max(per_node.values()) / len(self.records)
+        return out

@@ -200,6 +200,167 @@ def test_qpush_batch_empty_and_invalid():
     assert all(qp.state == QPState.RTS for qp in m0.pools[0].dc_qps)
 
 
+# ================================================ two-sided SEND batches
+@st.composite
+def send_batch_config(draw):
+    n = draw(st.integers(1, 80))
+    interval = draw(st.integers(1, 16))
+    nbytes = draw(st.sampled_from([16, 256, 1024]))
+    return n, interval, nbytes
+
+
+@settings(max_examples=12, deadline=None)
+@given(send_batch_config())
+def test_send_batch_cqe_count_and_batched_recv_drain(cfg):
+    """SEND batches through qpush_batch obey the SAME selective-signaling
+    contract as the one-sided path — exactly ceil(N / interval_eff) CQEs,
+    covers retiring every SQ entry — and the receiver drains all N
+    messages through the batched recv pump + ONE-crossing sys_qpop_msgs,
+    byte-exact and in FIFO order."""
+    n, interval, nbytes = cfg
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    env = cluster.env
+    out = {}
+
+    def server():
+        qd = yield from m1.sys_queue()
+        yield from m1.sys_qbind(qd, 6001)
+        mr = yield from m1.sys_qreg_mr(n * nbytes + 4096)
+        for i in range(n):
+            yield from m1.sys_qpush_recv(qd, mr, i * nbytes, nbytes,
+                                         wr_id=i)
+        msgs = []
+        spins = 0
+        while len(msgs) < n:
+            got = yield from m1.sys_qpop_msgs(qd, max_n=n)
+            msgs.extend(got)
+            if len(msgs) < n:
+                spins += 1
+                assert spins < 50_000, f"recv drain stalled at {len(msgs)}"
+                yield env.timeout(1.0)
+        out["msgs"], out["mr"] = msgs, mr
+        return True
+
+    def client():
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1", port=6001)
+        mr = yield from m0.sys_qreg_mr(n * nbytes + 4096)
+        buf = cluster.node("n0").buffer(mr.addr)
+        for i in range(n):
+            buf[i * nbytes: (i + 1) * nbytes] = (i * 37 + 11) % 251
+        wrs = [WorkRequest(op="SEND", wr_id=3000 + i, local_mr=mr,
+                           local_off=i * nbytes, nbytes=nbytes)
+               for i in range(n)]
+        vq = m0.vqs[qd]
+        n_cqes = yield from m0.qpush_batch(qd, wrs,
+                                           signal_interval=interval)
+        qp = vq.qp
+        k_eff = min(interval, min(qp.sq_depth, qp.cq_depth - 1))
+        assert n_cqes == math.ceil(n / k_eff), (n_cqes, n, k_eff)
+        ents = yield from m0.qpop_batch_block(qd, n_cqes)
+        assert len(ents) == n_cqes
+        assert sum(e.covers for e in ents) == n
+        assert not any(e.err for e in ents)
+        assert vq.uncomp_cnt == 0
+        return True
+
+    sp = env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered
+    msgs = out["msgs"]
+    assert len(msgs) == n
+    # FIFO: message i landed in recv buffer i with its own byte pattern
+    assert [m.wr_id for m in msgs] == list(range(n))
+    buf = cluster.node("n1").buffer(out["mr"].addr)
+    for i in range(n):
+        want = (i * 37 + 11) % 251
+        got = buf[i * nbytes: (i + 1) * nbytes]
+        assert (got == want).all(), (i, want, got[:4])
+
+
+def test_send_batch_mostly_unsignaled_one_cqe():
+    """A whole SEND batch with interval >= N produces exactly ONE CQE
+    (the ROADMAP's 'mostly unsignaled' SEND regime) and still delivers
+    every message."""
+    n = 24
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    env = cluster.env
+    got = {}
+
+    def server():
+        qd = yield from m1.sys_queue()
+        yield from m1.sys_qbind(qd, 6002)
+        mr = yield from m1.sys_qreg_mr(1 << 16)
+        for i in range(n):
+            yield from m1.sys_qpush_recv(qd, mr, 64 * i, 64, wr_id=i)
+        msgs = []
+        while len(msgs) < n:
+            msgs.extend((yield from m1.sys_qpop_msgs(qd)))
+            if len(msgs) < n:
+                yield env.timeout(1.0)
+        got["n"] = len(msgs)
+        return True
+
+    def client():
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1", port=6002)
+        mr = yield from m0.sys_qreg_mr(4096)
+        wrs = [WorkRequest(op="SEND", wr_id=i, local_mr=mr, local_off=0,
+                           nbytes=32) for i in range(n)]
+        n_cqes = yield from m0.qpush_batch(qd, wrs, signal_interval=n)
+        assert n_cqes == 1
+        ents = yield from m0.qpop_batch_block(qd, 1)
+        assert ents[0].covers == n and not ents[0].err
+        return True
+
+    sp = env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered and got["n"] == n
+
+
+# ================================= satellite: unsignaled-WR ERR routing
+def test_unsignaled_err_cqes_route_to_owning_vq():
+    """An ERR completion of an *unsignaled* WR must reach the owning
+    VirtQueue (wr_ids now encode vq ownership with comp_cnt == 0), so a
+    mostly-unsignaled SEND batch against a dead node surfaces an errored
+    CompEntry instead of being dropped on the floor."""
+    cluster = build_cluster()
+    m0 = cluster.module("n0")
+    env = cluster.env
+
+    def scenario():
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        vq = m0.vqs[qd]
+        cluster.fabric.node("n1").alive = False
+        wrs = [WorkRequest(op="SEND", wr_id=500 + i,
+                           signaled=(i == 3),
+                           payload=np.zeros(16, np.uint8), nbytes=16)
+               for i in range(4)]
+        rc = yield from m0.sys_qpush(qd, wrs)
+        assert rc == 0
+        ent = None
+        for _ in range(10_000):            # bounded spin (no qpop_block:
+            ent = yield from m0.sys_qpop(qd)   # a regression must not hang)
+            if ent is not None:
+                break
+            yield env.timeout(0.5)
+        assert ent is not None, "ERR completion never routed to owner vq"
+        assert ent.err and vq.errored
+        assert ent.covers == 4             # the whole run retires at once
+        assert vq.uncomp_cnt == 0
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+    env.run()                              # let background recovery finish
+    assert all(qp.state == QPState.RTS
+               for qp in m0.pools[0].dc_qps)
+
+
 # =========================================================== KV batching
 def test_kvclient_get_many_with_collisions():
     cluster = build_cluster()
@@ -227,6 +388,46 @@ def test_kvclient_get_many_with_collisions():
             assert v == b"val-" + k
         assert got[len(keys)] is None        # collided then resolved miss
         assert got[len(keys) + 1] is None
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_get_many_pipelines_rounds_behind_doorbells():
+    """Satellite: with a scratch that forces many rounds, the pipelined
+    get_many (round r+1 posted behind round r's doorbell, double-buffered
+    scratch banks) must beat the serial per-chunk bound of one full RTT
+    per round — while staying correct."""
+    from repro.core.meta import KVClient
+
+    cluster = build_cluster()
+    m0 = cluster.module("n0")
+    env = cluster.env
+    base = m0._meta_clients[0]
+    kv = base.server
+    keys = [f"pipe{i}".encode() for i in range(40)]
+    for k in keys:
+        kv.put(k, b"pv-" + k[:8])
+    # tiny scratch -> bank_cap 4, 10 pipelined rounds for 40 keys
+    node = cluster.node("n0")
+    scratch = node.reg_mr(node.alloc(8 * 32), 8 * 32)
+    client = KVClient(base.qp, kv, scratch, scratch_off=0,
+                      batch_scratch_off=0)
+
+    def scenario():
+        t0 = env.now
+        v = yield from client.lookup(keys[0])
+        rtt = env.now - t0
+        assert v == b"pv-" + keys[0][:8]
+        t0 = env.now
+        got = yield from client.get_many(keys)
+        elapsed = env.now - t0
+        for k, v in zip(keys, got):
+            assert v == b"pv-" + k[:8]
+        n_rounds = 10
+        # serial per-chunk sync costs ~one RTT per round; pipelining must
+        # overlap at least a couple of rounds' worth
+        assert elapsed < 0.8 * n_rounds * rtt, (elapsed, rtt)
         return True
 
     assert cluster.env.run_process(scenario(), "s")

@@ -1,0 +1,277 @@
+"""Serverless subsystem tests: the staging kernel, the slab wire format,
+chain epochs (doorbell budget = the acceptance criterion), warm/cold
+container pools, the invocation gateway, traces, and mid-chain failover
+with DCCache/MRStore invalidation."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_cluster
+from repro.kernels.serverless_stage.ops import (chunk_gather, stage_pack,
+                                                stage_unpack)
+from repro.kernels.serverless_stage.ref import chunk_gather_ref, pack_ref
+from repro.serverless import (ChainRunner, ContainerPool, FunctionDef,
+                              InvocationGateway, decode_slab,
+                              default_registry, diurnal_trace, encode_slab,
+                              expected_outputs, poisson_trace, spike_trace)
+
+CHAIN = ("extract", "transform", "load")
+
+
+def _payloads(rng, k, nbytes):
+    return [rng.randint(0, 256, nbytes).astype(np.uint8) for _ in range(k)]
+
+
+# ========================================================= staging kernel
+@st.composite
+def ragged_lengths(draw):
+    k = draw(st.integers(1, 12))
+    lmax = draw(st.sampled_from([1, 100, 128, 300, 513]))
+    lengths = [draw(st.integers(0, lmax)) for _ in range(k)]
+    return lmax, lengths
+
+
+@settings(max_examples=15, deadline=None)
+@given(ragged_lengths())
+def test_stage_pack_matches_ref_and_roundtrips(cfg):
+    lmax, lengths = cfg
+    rng = np.random.RandomState(sum(lengths) + lmax)
+    k = len(lengths)
+    payloads = rng.randint(0, 1 << 30, (k, lmax)).astype(np.int32)
+    slab, starts = stage_pack(payloads, lengths)
+    ref = pack_ref(payloads, lengths).reshape(-1)
+    np.testing.assert_array_equal(slab, ref)
+    # starts are the chunk-aligned offsets
+    assert list(starts) == list(np.cumsum(
+        [0] + [-(-n // 128) for n in lengths])[:-1])
+    out = stage_unpack(slab, lengths, lmax)
+    for i, n in enumerate(lengths):
+        np.testing.assert_array_equal(out[i, :n], payloads[i, :n])
+        assert not out[i, n:].any()          # ragged tail zeroed
+
+
+def test_chunk_gather_pallas_matches_ref():
+    rng = np.random.RandomState(3)
+    src = rng.randint(0, 1 << 30, (9, 128)).astype(np.int32)
+    src_row = np.array([8, 0, 3, 3, 5], np.int32)
+    valid = np.array([128, 0, 64, 128, 1], np.int32)
+    got = np.asarray(chunk_gather(src, src_row, valid, impl="pallas"))
+    ref = np.asarray(chunk_gather_ref(src, src_row, valid))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_stage_pack_empty_and_zero_length():
+    slab, starts = stage_pack(np.zeros((0, 4), np.int32), [])
+    assert slab.size == 0 and starts.size == 0
+    slab, starts = stage_pack(np.zeros((2, 4), np.int32), [0, 0])
+    assert slab.size == 0
+    out = stage_unpack(slab, [0, 0], 4)
+    assert out.shape == (2, 4) and not out.any()
+
+
+# ======================================================= slab wire format
+def test_slab_encode_decode_roundtrip_with_seq():
+    rng = np.random.RandomState(11)
+    for seq, sizes in ((0, [1]), (3, [700, 0, 4096, 9]), (7, [100] * 20)):
+        payloads = [rng.randint(0, 256, n).astype(np.uint8) for n in sizes]
+        raw = encode_slab(payloads, seq=seq)
+        assert len(raw) % 512 == 0           # chunk-aligned wire size
+        got_seq, got = decode_slab(raw)
+        assert got_seq == seq
+        assert len(got) == len(payloads)
+        for a, b in zip(got, payloads):
+            np.testing.assert_array_equal(a, b)
+
+
+# ============================================================ chain epochs
+def test_chain_doorbell_budget_and_byte_exact_outputs():
+    """Acceptance criterion: a 3-stage chain at batch >= 32 issues
+    <= ceil(K/slab) sender doorbells per hop via the staging kernel (in
+    practice ONE — all slabs ride a single qpush_batch), and the final
+    payloads are byte-exact."""
+    k, slab = 32, 16
+    cluster = make_cluster(n_nodes=3, n_meta=1)
+    reg = default_registry(payload_bytes=1024)
+    pool = ContainerPool(cluster, "krcore")
+    runner = ChainRunner(cluster, reg, pool, "krcore", slab_payloads=slab)
+    payloads = _payloads(np.random.RandomState(0), k, 1024)
+
+    def scenario():
+        return (yield from runner.run_batch(CHAIN, ["n0", "n1", "n2"],
+                                            k, payloads))
+
+    rep = cluster.env.run_process(scenario(), "chain")
+    exp = expected_outputs(reg, CHAIN, payloads)
+    assert all(np.array_equal(a, b) for a, b in zip(rep.outputs, exp))
+    assert len(rep.hops) == 2
+    budget = math.ceil(k / slab)
+    for hop in rep.hops:
+        assert 0 < hop.doorbells <= budget, (hop.doorbells, budget)
+        assert hop.groups == budget
+
+
+def test_chain_transfer_beats_verbs_by_90_percent():
+    """Acceptance criterion: KRCore end-to-end transfer latency (control
+    + data plane) for <= 16KB payloads is >= 90% below VerbsProcess."""
+    k = 4
+    reports = {}
+    for transport in ("krcore", "verbs"):
+        cluster = make_cluster(n_nodes=3, n_meta=1)
+        reg = default_registry(payload_bytes=8192)
+        pool = ContainerPool(cluster, transport)
+        runner = ChainRunner(cluster, reg, pool, transport)
+        payloads = _payloads(np.random.RandomState(1), k, 8192)
+
+        def scenario():
+            return (yield from runner.run_batch(CHAIN, ["n0", "n1", "n2"],
+                                                k, payloads))
+
+        rep = cluster.env.run_process(scenario(), transport)
+        exp = expected_outputs(reg, CHAIN, payloads)
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(rep.outputs, exp)), transport
+        reports[transport] = rep
+    reduction = 1 - (reports["krcore"].transfer_us
+                     / reports["verbs"].transfer_us)
+    assert reduction >= 0.90, reduction      # paper: 99%
+
+
+def test_chain_second_epoch_hits_warm_pool():
+    cluster = make_cluster(n_nodes=3, n_meta=1)
+    reg = default_registry(payload_bytes=512)
+    pool = ContainerPool(cluster, "krcore", warm_target=4,
+                         prewarm_threshold=1)
+    runner = ChainRunner(cluster, reg, pool, "krcore", slab_payloads=8)
+    k = 4
+    rng = np.random.RandomState(2)
+
+    def epoch():
+        payloads = _payloads(rng, k, 512)
+        rep = yield from runner.run_batch(CHAIN, ["n0", "n1", "n2"],
+                                          k, payloads)
+        exp = expected_outputs(reg, CHAIN, payloads)
+        assert all(np.array_equal(a, b) for a, b in zip(rep.outputs, exp))
+        return rep
+
+    rep1 = cluster.env.run_process(epoch(), "e1")
+    assert all(s.warm == 0 for s in rep1.stages)
+    cluster.env.run()                        # background prewarm settles
+    rep2 = cluster.env.run_process(epoch(), "e2")
+    warm2 = sum(s.warm for s in rep2.stages)
+    assert warm2 > 0, "second epoch never hit the warm pool"
+    # warm leases skip the fork on the critical path
+    assert (sum(s.fork_wall_us for s in rep2.stages)
+            < sum(s.fork_wall_us for s in rep1.stages))
+
+
+# ============================== satellite: failover + cache invalidation
+def test_failover_mid_chain_invalidates_caches_and_completes():
+    """Node death during an in-flight chained invocation: the ERR
+    completions route back (unsignaled included), the runner invalidates
+    the dead peer's DCCache/MRStore entries and warm containers, retries
+    on the standby node, and the chain completes byte-exact."""
+    cluster = make_cluster(n_nodes=4, n_meta=1)
+    reg = default_registry(payload_bytes=900)
+    pool = ContainerPool(cluster, "krcore")
+    runner = ChainRunner(cluster, reg, pool, "krcore", slab_payloads=4,
+                         standby={"n1": "n3"})
+    k = 6
+    payloads = _payloads(np.random.RandomState(3), k, 900)
+    m0 = cluster.module("n0")
+
+    def scenario():
+        # touch n1 so its DCT metadata and a checked MR are cached
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        mr_r = yield from cluster.module("n1").sys_qreg_mr(4096)
+        from repro.core import WorkRequest
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="READ", wr_id=1, local_mr=(yield from m0.sys_qreg_mr(4096)),
+            local_off=0, remote_rkey=mr_r.rkey, remote_off=0, nbytes=8)])
+        assert rc == 0
+        yield from m0.qpop_block(qd)
+        assert m0.dccache.get("n1") is not None
+        assert m0.mrstore.get("n1", mr_r.rkey) is not None
+        cluster.fabric.node("n1").alive = False
+        rep = yield from runner.run_batch(CHAIN, ["n0", "n1", "n2"],
+                                          k, payloads)
+        return rep
+
+    rep = cluster.env.run_process(scenario(), "chain")
+    exp = expected_outputs(reg, CHAIN, payloads)
+    assert all(np.array_equal(a, b) for a, b in zip(rep.outputs, exp))
+    assert sum(h.failovers for h in rep.hops) >= 1
+    assert [s.node for s in rep.stages] == ["n0", "n3", "n2"]
+    # §4.2 failure handling: every cache keyed by the dead node is gone
+    assert m0.dccache._cache.get("n1") is None
+    assert not any(r == "n1" for (r, _) in m0.mrstore._cache)
+    assert not any(p.has_rc("n1") for p in m0.pools)
+    assert pool.warm_count("n1", "transform") == 0
+
+
+# ========================================================== gateway/traces
+def test_gateway_open_loop_admission_and_placement():
+    cluster = make_cluster(n_nodes=4, n_meta=1)
+    reg = default_registry(payload_bytes=1024)
+    pool = ContainerPool(cluster, "krcore", warm_target=2,
+                         prewarm_threshold=2)
+    gw = InvocationGateway(cluster, reg, pool,
+                           worker_nodes=["n0", "n1", "n2"], data_node="n3")
+    arrivals = poisson_trace(rate_per_s=500.0, duration_us=60_000.0,
+                             seed=5)
+    assert len(arrivals) > 5
+
+    def scenario():
+        recs = yield from gw.submit_trace("extract", arrivals,
+                                          payload_bytes=1024)
+        return recs
+
+    recs = cluster.env.run_process(scenario(), "gw")
+    assert len(recs) == len(arrivals)        # open loop: nothing dropped
+    s = gw.summary()
+    assert s["n"] == len(arrivals)
+    # placement spread: no worker hogs everything (3 nodes)
+    assert s["max_node_share"] < 0.75
+    # decomposition sanity: every record accounts its phases
+    for r in recs:
+        assert r.end_us >= r.start_us >= r.arrival_us
+        assert r.kind in ("warm", "cold")
+        assert r.compute_us > 0
+        if r.kind == "cold":
+            assert r.fork_us >= cluster.fabric.cm.fork_worker_us
+    # the pool warmed up under load
+    assert s["warm"] > 0
+
+
+def test_traces_deterministic_and_shaped():
+    a1 = poisson_trace(300.0, 100_000.0, seed=9)
+    a2 = poisson_trace(300.0, 100_000.0, seed=9)
+    np.testing.assert_array_equal(a1, a2)    # deterministic in seed
+    assert len(a1) > 0 and (np.diff(a1) >= 0).all()
+    assert a1[-1] < 100_000.0
+    # spike: the burst window is denser than the base
+    sp = spike_trace(100.0, 2000.0, 100_000.0, 40_000.0, 20_000.0, seed=4)
+    burst = ((sp >= 40_000.0) & (sp < 60_000.0)).sum()
+    base = len(sp) - burst
+    assert burst > 3 * max(base, 1)
+    # diurnal: rate varies across the period (peak half vs trough half)
+    di = diurnal_trace(400.0, 200_000.0, period_us=200_000.0,
+                       amplitude=0.9, seed=6)
+    first, second = (di < 100_000.0).sum(), (di >= 100_000.0).sum()
+    assert first > 1.5 * second              # sin > 0 in the first half
+    with pytest.raises(ValueError):
+        diurnal_trace(10.0, 1000.0, 500.0, amplitude=1.5)
+
+
+def test_registry_chain_validation():
+    reg = default_registry()
+    assert [f.name for f in reg.chain(*CHAIN)] == list(CHAIN)
+    with pytest.raises(KeyError):
+        reg.chain("extract", "nope")
+    with pytest.raises(ValueError):
+        reg.chain()
+    with pytest.raises(ValueError):
+        reg.register(FunctionDef(name="extract"))
