@@ -5,15 +5,20 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify test smoke bench deps-dev
+.PHONY: verify test smoke bench apicheck deps-dev
 
-verify: test smoke
+verify: test smoke apicheck
 
 test:
 	python -m pytest -x -q
 
 smoke:
 	python -m benchmarks.run --smoke
+
+# deprecation surface: clients are Session-only outside core/, and the
+# legacy sys_q* shim module warns exactly once on import
+apicheck:
+	python tools/check_api_surface.py
 
 bench:
 	python -m benchmarks.batched_lookup

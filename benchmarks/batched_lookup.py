@@ -107,11 +107,16 @@ def bench_kernel_sweep(batches, vdims, *, nb=256, nslot=8,
 
 # ------------------------------------------------------- fabric doorbells
 def bench_fabric_batching(n_wrs=256, signal_interval=16) -> Dict:
-    """qpush_batch (one syscall+doorbell, selective signaling) vs per-WR
-    sys_qpush on the simulated fabric; microsecond clock."""
-    from repro.core import WorkRequest, make_cluster
+    """Three generations of the same 64B-READ batch on the simulated
+    fabric: per-WR raw push (one syscall + doorbell + CQE each), raw
+    qpush_batch (the hand-rolled batch discipline), and the Session layer
+    (typed futures, auto-planned batching). The raw paths go through the
+    deprecated ``repro.core.legacy`` shims — they ARE the deprecated
+    idiom — and the session-vs-raw delta is the overhead the session
+    abstraction costs (gated <= 5% at batch >= 128 in run.py --smoke)."""
+    from repro.core import WorkRequest, connect, legacy, make_cluster
 
-    def run(batched: bool) -> float:
+    def run(mode: str) -> float:
         cluster = make_cluster(n_nodes=2, n_meta=1)
         env = cluster.env
         m0, m1 = cluster.module("n0"), cluster.module("n1")
@@ -119,35 +124,59 @@ def bench_fabric_batching(n_wrs=256, signal_interval=16) -> Dict:
 
         def scenario():
             mr_srv = yield from m1.sys_qreg_mr(4096)
-            mr = yield from m0.sys_qreg_mr(4096)
-            qd = yield from m0.sys_queue()
-            yield from m0.sys_qconnect(qd, "n1")
-            wrs = [WorkRequest(op="READ", wr_id=i, local_mr=mr,
-                               local_off=0, remote_rkey=mr_srv.rkey,
-                               remote_off=0, nbytes=64)
-                   for i in range(n_wrs)]
-            t0 = env.now
-            if batched:
-                n_cqes = yield from m0.qpush_batch(
-                    qd, wrs, signal_interval=signal_interval)
-                yield from m0.qpop_batch_block(qd, n_cqes)
+            t0 = None
+            if mode == "session":
+                sess = yield from connect(m0, "n1",
+                                          signal_interval=signal_interval)
+                # warm (MRStore + pool growth), mirroring the raw warmup
+                yield from sess.read(mr_srv.rkey, 0, 64).wait()
+                t0 = env.now
+                with sess.batch():
+                    futs = [sess.read(mr_srv.rkey, 0, 64)
+                            for _ in range(n_wrs)]
+                yield from sess.wait_all(futs)
             else:
-                for wr in wrs:
-                    rc = yield from m0.sys_qpush(qd, [wr])
-                    assert rc == 0
-                    yield from m0.qpop_block(qd)
+                mr = yield from m0.sys_qreg_mr(4096)
+                qd = yield from m0.sys_queue()
+                yield from m0.sys_qconnect(qd, "n1")
+
+                def wrs():
+                    return [WorkRequest(op="READ", wr_id=i, local_mr=mr,
+                                        local_off=0,
+                                        remote_rkey=mr_srv.rkey,
+                                        remote_off=0, nbytes=64)
+                            for i in range(n_wrs)]
+
+                # warm the MRStore so every mode times the same fast path
+                rc = yield from legacy.qpush(m0, qd, wrs()[:1])
+                assert rc == 0
+                yield from legacy.qpop_block(m0, qd)
+                t0 = env.now
+                if mode == "batched":
+                    n_cqes = yield from legacy.qpush_batch(
+                        m0, qd, wrs(), signal_interval=signal_interval)
+                    yield from legacy.qpop_batch_block(m0, qd, n_cqes)
+                else:
+                    for wr in wrs():
+                        rc = yield from legacy.qpush(m0, qd, [wr])
+                        assert rc == 0
+                        yield from legacy.qpop_block(m0, qd)
             out["us"] = env.now - t0
             return True
 
         env.run_process(scenario(), "s")
         return out["us"]
 
-    per_op, batched = run(False), run(True)
+    per_op, batched, session = run("per_op"), run("batched"), run("session")
     return {"n_wrs": n_wrs, "signal_interval": signal_interval,
             "per_op_us": round(per_op, 2), "batched_us": round(batched, 2),
+            "session_us": round(session, 2),
             "per_op_us_per_wr": round(per_op / n_wrs, 3),
             "batched_us_per_wr": round(batched / n_wrs, 3),
-            "speedup": round(per_op / batched, 2)}
+            "session_us_per_wr": round(session / n_wrs, 3),
+            "session_overhead": round(session / batched - 1.0, 4),
+            "speedup": round(per_op / batched, 2),
+            "session_speedup": round(per_op / session, 2)}
 
 
 def bench_kv_batching(n_keys=48) -> Dict:
@@ -195,7 +224,8 @@ def run_suite(smoke: bool = False) -> Dict:
         # CI failure; three samples cost < 1s extra
         kernel = bench_kernel_sweep([16, 64], [64], nb=64, qblock=8,
                                     repeats=3)
-        fabric = bench_fabric_batching(n_wrs=32, signal_interval=8)
+        # n_wrs=128: the session-overhead gate is defined at batch >= 128
+        fabric = bench_fabric_batching(n_wrs=128, signal_interval=8)
         kv = bench_kv_batching(n_keys=8)
     else:
         kernel = bench_kernel_sweep([8, 32, 128, 512], [64, 128, 256])
@@ -228,6 +258,8 @@ def main() -> None:
     print(f"fabric qpush_batch n={fb['n_wrs']} "
           f"per-op={fb['per_op_us_per_wr']}us/wr "
           f"batched={fb['batched_us_per_wr']}us/wr "
+          f"session={fb['session_us_per_wr']}us/wr "
+          f"(overhead {100 * fb['session_overhead']:.1f}%) "
           f"speedup={fb['speedup']}x")
     kv = results["kv_lookup_many"]
     print(f"kv lookup_many n={kv['n_keys']} speedup={kv['speedup']}x")

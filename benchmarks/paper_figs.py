@@ -12,6 +12,9 @@ import numpy as np
 
 from repro.core import (LiteKernel, QPError, VerbsProcess, WorkRequest,
                         make_cluster)
+# these figures measure the RAW syscall surface itself; the deprecated
+# shim keeps that idiom importable (apps use repro.core.Session instead)
+from repro.core import legacy as kr_legacy
 from repro.kvs import RaceKVStore
 from repro.kvs.race import RaceClient
 
@@ -238,15 +241,15 @@ def _krcore_read_latency(cluster, kind: str, nbytes: int = 8) -> float:
         wr = WorkRequest(op="READ", wr_id=0, local_mr=mr_l, local_off=0,
                          remote_rkey=mr_r.rkey, remote_off=0,
                          nbytes=nbytes)
-        yield from m0.sys_qpush(qd, [wr])
-        yield from m0.qpop_block(qd)
+        yield from kr_legacy.qpush(m0, qd, [wr])
+        yield from kr_legacy.qpop_block(m0, qd)
         t0 = env.now
         for _ in range(8):
             wr = WorkRequest(op="READ", wr_id=1, local_mr=mr_l,
                              local_off=0, remote_rkey=mr_r.rkey,
                              remote_off=0, nbytes=nbytes)
-            yield from m0.sys_qpush(qd, [wr])
-            yield from m0.qpop_block(qd)
+            yield from kr_legacy.qpush(m0, qd, [wr])
+            yield from kr_legacy.qpop_block(m0, qd)
         lat["us"] = (env.now - t0) / 8
         return True
 
@@ -301,17 +304,17 @@ def bench_fig11_9b() -> List[Row]:
             yield from m1.sys_qbind(qd, 7)
             mr = yield from m1.sys_qreg_mr(2 * nbytes + 8192)
             for i in range(10):
-                yield from m1.sys_qpush_recv(qd, mr, 0, nbytes + 64,
+                yield from kr_legacy.qpush_recv(m1, qd, mr, 0, nbytes + 64,
                                              wr_id=i)
             served = 0
             while served < 9:
-                msgs = yield from m1.sys_qpop_msgs(qd)
+                msgs = yield from kr_legacy.qpop_msgs(m1, qd)
                 for msg in msgs:
                     rep = WorkRequest(op="SEND", wr_id=1,
                                       payload=np.zeros(8, np.uint8),
                                       nbytes=8)
-                    yield from m1.sys_qpush(msg.reply_qd, [rep])
-                    yield from m1.qpop_block(msg.reply_qd)
+                    yield from kr_legacy.qpush(m1, msg.reply_qd, [rep])
+                    yield from kr_legacy.qpop_block(m1, msg.reply_qd)
                     served += 1
                 yield env.timeout(0.5)
             return True
@@ -323,14 +326,14 @@ def bench_fig11_9b() -> List[Row]:
             yield env.timeout(5.0)
             lats = []
             for i in range(9):
-                yield from m0.sys_qpush_recv(qd, mr, nbytes, 64, wr_id=i)
+                yield from kr_legacy.qpush_recv(m0, qd, mr, nbytes, 64, wr_id=i)
                 t0 = env.now
                 wr = WorkRequest(op="SEND", wr_id=1, local_mr=mr,
                                  local_off=0, nbytes=nbytes)
-                yield from m0.sys_qpush(qd, [wr])
-                yield from m0.qpop_block(qd)
+                yield from kr_legacy.qpush(m0, qd, [wr])
+                yield from kr_legacy.qpop_block(m0, qd)
                 while True:
-                    msgs = yield from m0.sys_qpop_msgs(qd)
+                    msgs = yield from kr_legacy.qpop_msgs(m0, qd)
                     if msgs:
                         break
                     yield env.timeout(0.2)
@@ -366,8 +369,8 @@ def bench_fig12a() -> List[Row]:
         t0 = env.now
         wr = WorkRequest(op="READ", wr_id=1, local_mr=mr_l, local_off=0,
                          remote_rkey=mr_r.rkey, remote_off=0, nbytes=8)
-        yield from m0.sys_qpush(qd, [wr])
-        yield from m0.qpop_block(qd)
+        yield from kr_legacy.qpush(m0, qd, [wr])
+        yield from kr_legacy.qpop_block(m0, qd)
         res["miss"] = env.now - t0
         return True
 
@@ -400,8 +403,8 @@ def bench_fig12b() -> List[Row]:
             wr = WorkRequest(op="WRITE", wr_id=1, local_mr=mr,
                              local_off=0, remote_rkey=mr_r.rkey,
                              remote_off=0, nbytes=nbytes)
-            yield from m0.sys_qpush(qd, [wr])
-            yield from m0.qpop_block(qd)
+            yield from kr_legacy.qpush(m0, qd, [wr])
+            yield from kr_legacy.qpop_block(m0, qd)
             res["kr"] = env.now - t0
             return True
 
@@ -492,11 +495,11 @@ def bench_fig13() -> List[Row]:
                             remote_rkey=mr_r.rkey, remote_off=0,
                             nbytes=64)
                 for i in range(512)]
-        rc = yield from m0.sys_qpush(qd, reqs)
+        rc = yield from kr_legacy.qpush(m0, qd, reqs)
         assert rc == 0
         drained = 0
         while drained < 512 // 16:
-            ent = yield from m0.sys_qpop(qd)
+            ent = yield from kr_legacy.qpop(m0, qd)
             if ent is None:
                 yield env.timeout(0.5)
                 continue

@@ -38,6 +38,16 @@ def _smoke() -> None:
         print(f"smoke/{name},{r['batched_us']:.3f},"
               f"speedup={r['speedup']}x")
 
+    # session-vs-raw overhead gate: the typed Session/Future layer must
+    # cost <= 5% added latency over hand-rolled qpush_batch at batch >= 128
+    fb = results["fabric_qpush_batch"]
+    if fb["n_wrs"] >= 128 and fb["session_overhead"] > 0.05:
+        raise SystemExit(
+            f"session layer overhead {100 * fb['session_overhead']:.1f}% "
+            f"> 5% gate at batch {fb['n_wrs']}: {fb}")
+    print(f"smoke/session_overhead,{fb['session_us_per_wr']:.3f},"
+          f"overhead={100 * fb['session_overhead']:.2f}%_vs_raw_batched")
+
     # serverless: Fig 12b transfer-latency gate + doorbells-per-hop gate
     from benchmarks.serverless import check_gates
     from benchmarks.serverless import run_suite as serverless_suite
@@ -55,6 +65,13 @@ def _smoke() -> None:
               f"{row['krcore_transfer_us']:.3f},"
               f"doorbells={row['krcore_doorbells_per_hop']}/"
               f"{row['doorbell_budget_per_hop']}")
+    ru = sl["chain_reuse"]
+    print(f"smoke/serverless_chain_reuse,{ru['epoch_control_us'][-1]},"
+          f"control_saved={100 * ru['reuse_reduction']:.1f}%")
+    rp = sl["response"]
+    print(f"smoke/serverless_response_spike_p999,"
+          f"{rp['spike_window']['p999_us']},"
+          f"closed_loop_p99={rp['p99_us']}us")
     print("SMOKE_OK")
 
 

@@ -67,16 +67,16 @@ def _measure_transfer(transport: str, nbytes: int) -> Dict:
         out["fork_us"] = env.now - t0
         t0 = env.now
         handle = yield from c.connect("n1")
-        wr = WorkRequest(op="WRITE", wr_id=1, signaled=True, local_mr=c.mr,
-                         local_off=0, remote_rkey=mr_r.rkey, remote_off=0,
-                         nbytes=nbytes)
         if transport == "krcore":
-            mod = c.module
-            rc = yield from mod.sys_qpush(handle, [wr])
-            assert rc == 0
-            ent = yield from mod.qpop_block(handle)
-            assert not ent.err
+            # session endpoint: one typed WRITE straight from the
+            # container's working set
+            fut = handle.write(mr_r.rkey, 0, src=(c.mr, 0, nbytes))
+            yield from fut.wait()
         else:
+            wr = WorkRequest(op="WRITE", wr_id=1, signaled=True,
+                             local_mr=c.mr, local_off=0,
+                             remote_rkey=mr_r.rkey, remote_off=0,
+                             nbytes=nbytes)
             if transport == "lite":
                 yield env.timeout(cluster.fabric.cm.syscall_us)
             handle.post_send([wr])
@@ -162,6 +162,91 @@ def bench_chain(batch_sizes: List[int], payload_bytes: int = 1024,
     return rows
 
 
+# ----------------------------------------- listener-cache reuse (chains)
+def bench_chain_reuse(k: int = 32, payload_bytes: int = 1024,
+                      slab_payloads: int = 16, epochs: int = 3) -> Dict:
+    """Per-node listener + session cache: epoch 1 pays the hop control
+    plane (listener + connect) once per node; later epochs reuse it, so
+    per-epoch hop control cost must collapse (ROADMAP open item, now a
+    gate)."""
+    from repro.core import make_cluster
+    from repro.serverless import (ChainRunner, ContainerPool,
+                                  default_registry, expected_outputs)
+
+    names = ("extract", "transform", "load")
+    cluster = make_cluster(n_nodes=3, n_meta=1)
+    reg = default_registry(payload_bytes=payload_bytes)
+    pool = ContainerPool(cluster, "krcore", warm_target=4)
+    runner = ChainRunner(cluster, reg, pool, "krcore",
+                         slab_payloads=slab_payloads)
+    rng = np.random.RandomState(17)
+    control: List[float] = []
+    for e in range(epochs):
+        payloads = [rng.randint(0, 256, payload_bytes).astype(np.uint8)
+                    for _ in range(k)]
+
+        def scenario():
+            return (yield from runner.run_batch(names, ["n0", "n1", "n2"],
+                                                k, payloads))
+
+        rep = cluster.env.run_process(scenario(), f"reuse.{e}")
+        exp = expected_outputs(reg, names, payloads)
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(rep.outputs, exp)), "corrupted payloads"
+        control.append(round(sum(h.control_us for h in rep.hops), 3))
+    return {"k": int(k), "epochs": int(epochs),
+            "epoch_control_us": control,
+            "reuse_reduction": round(1.0 - control[-1] / control[0], 4)
+            if control[0] > 0 else 1.0}
+
+
+# --------------------------------- closed loop: spike-window tail latency
+def bench_response(n_nodes: int = 2, duration_us: float = 120_000.0,
+                   base_rate: float = 150.0, spike_mult: float = 8.0,
+                   payload_bytes: int = 1024) -> Dict:
+    """Fig 14 analogue, completed: the gateway loop is CLOSED — every
+    invocation's output returns to the caller via session.call, and
+    total_us is end-to-end at the caller (request + fork + control +
+    data + compute + response). Reports p99/p999 inside the spike window
+    vs off-peak."""
+    from repro.core import make_cluster
+    from repro.serverless import (ContainerPool, InvocationGateway,
+                                  default_registry, spike_trace)
+
+    spike_start = duration_us * 0.4
+    spike_len = duration_us * 0.2
+    arrivals = spike_trace(base_rate, base_rate * spike_mult, duration_us,
+                           spike_start, spike_len, seed=14)
+    cluster = make_cluster(n_nodes=n_nodes + 2, n_meta=1)
+    reg = default_registry(payload_bytes=payload_bytes)
+    pool = ContainerPool(cluster, "krcore", warm_target=4,
+                         prewarm_threshold=2)
+    workers = [f"n{i}" for i in range(n_nodes)]
+    gw = InvocationGateway(cluster, reg, pool, worker_nodes=workers,
+                           data_node=f"n{n_nodes}",
+                           caller_node=f"n{n_nodes + 1}")
+
+    def scenario():
+        yield from gw.submit_trace("extract", arrivals,
+                                   payload_bytes=payload_bytes)
+        return True
+
+    cluster.env.run_process(scenario(), "response")
+    s = gw.summary()
+    base = gw.last_trace_base
+    spike = gw.window_summary(base + spike_start,
+                              base + spike_start + spike_len)
+    offpeak = gw.window_summary(base, base + spike_start)
+    rnd = lambda d: {kk: (round(vv, 3) if isinstance(vv, float) else vv)
+                     for kk, vv in d.items()}
+    return {"arrivals": len(arrivals), "n": s["n"],
+            "p50_us": round(s["p50_us"], 3),
+            "p99_us": round(s["p99_us"], 3),
+            "p999_us": round(s["p999_us"], 3),
+            "warm_ratio": round(s["warm_ratio"], 3),
+            "spike_window": rnd(spike), "offpeak": rnd(offpeak)}
+
+
 # ------------------------------------------------------ gateway + traces
 def bench_traces(n_nodes: int = 4, duration_us: float = 200_000.0,
                  rate_per_s: float = 400.0) -> List[Dict]:
@@ -221,6 +306,17 @@ def check_gates(results: Dict) -> List[str]:
     for row in results["traces"]:
         if row["n"] != row["arrivals"]:
             bad.append(f"trace dropped invocations: {row}")
+    reuse = results.get("chain_reuse")
+    if reuse is not None and reuse["reuse_reduction"] < 0.5:
+        bad.append(f"listener/session cache reuse saved "
+                   f"{100 * reuse['reuse_reduction']:.0f}% < 50% of hop "
+                   f"control cost: {reuse}")
+    resp = results.get("response")
+    if resp is not None:
+        if resp["n"] != resp["arrivals"]:
+            bad.append(f"closed loop dropped invocations: {resp}")
+        if resp["spike_window"].get("n", 0) == 0:
+            bad.append(f"no invocations landed in the spike window: {resp}")
     return bad
 
 
@@ -231,11 +327,17 @@ def run_suite(smoke: bool = False) -> Dict:
                             transports=("krcore", "verbs"))
         traces = bench_traces(n_nodes=2, duration_us=50_000.0,
                               rate_per_s=300.0)
+        reuse = bench_chain_reuse(k=16, payload_bytes=512, epochs=2)
+        response = bench_response(n_nodes=2, duration_us=60_000.0,
+                                  base_rate=150.0)
     else:
         transfer = bench_transfer([1024, 4096, 9216, 16 * 1024, 64 * 1024])
         chain = bench_chain([8, 32, 64], payload_bytes=1024)
         traces = bench_traces()
-    return {"transfer": transfer, "chain": chain, "traces": traces}
+        reuse = bench_chain_reuse()
+        response = bench_response()
+    return {"transfer": transfer, "chain": chain, "traces": traces,
+            "chain_reuse": reuse, "response": response}
 
 
 def main() -> None:
@@ -264,6 +366,13 @@ def main() -> None:
     for row in results["traces"]:
         print(f"trace {row['shape']:8s} n={row['n']} p50={row['p50_us']}us"
               f" p99={row['p99_us']}us warm={row['warm_ratio']}")
+    ru = results["chain_reuse"]
+    print(f"chain reuse: control/epoch {ru['epoch_control_us']} "
+          f"(saved {100 * ru['reuse_reduction']:.1f}%)")
+    rp = results["response"]
+    print(f"closed loop n={rp['n']} p99={rp['p99_us']}us "
+          f"p999={rp['p999_us']}us spike p99={rp['spike_window']['p99_us']}"
+          f"us p999={rp['spike_window']['p999_us']}us")
     print(f"wrote {args.out}")
     bad = check_gates(results)
     if bad:

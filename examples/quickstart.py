@@ -1,11 +1,13 @@
-"""Quickstart: the KRCORE API end-to-end on a simulated cluster.
+"""Quickstart: the KRCORE session API end-to-end on a simulated cluster.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Boots a 4-node cluster with one meta server, then shows the paper's whole
-control-plane story in one run: microsecond qconnect (vs. the 15.7ms Verbs
-path), doorbell-batched one-sided reads, two-sided messaging with accept
-semantics, zero-copy large transfers, and background DC->RC promotion.
+story in one run through the typed session layer: microsecond connect()
+(vs. the 15.7ms Verbs path), auto-batched one-sided read futures (the op
+planner coalesces ops posted in one tick into ONE doorbell), an 8-byte
+atomic CAS, two-sided call/reply with accept semantics, and background
+DC->RC promotion.
 """
 
 import sys
@@ -13,7 +15,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import WorkRequest, VerbsProcess, make_cluster
+from repro.core import VerbsProcess, connect, listen, make_cluster
 
 cluster = make_cluster(n_nodes=4, n_meta=1)
 env = cluster.env
@@ -23,35 +25,44 @@ m0, m1 = cluster.module("n0"), cluster.module("n1")
 def demo():
     # --- control path ----------------------------------------------------
     t0 = env.now
-    qd = yield from m0.sys_queue()
-    rc = yield from m0.sys_qconnect(qd, "n1")
-    print(f"[control] qconnect to a never-seen node: {env.now - t0:6.2f}us"
-          f" (rc={rc})")
+    sess = yield from connect(m0, "n1")
+    print(f"[control] connect() to a never-seen node: {env.now - t0:6.2f}us")
 
-    qd2 = yield from m0.sys_queue()
     t0 = env.now
-    yield from m0.sys_qconnect(qd2, "n1")
-    print(f"[control] qconnect w/ DCCache:           {env.now - t0:6.2f}us")
+    sess2 = yield from connect(m0, "n1")
+    print(f"[control] connect() w/ DCCache:           {env.now - t0:6.2f}us")
 
-    # --- one-sided data path (doorbell batch, Fig 7 style) ---------------
+    # --- one-sided data path (typed futures, Fig 7 style) ----------------
     mr_srv = yield from m1.sys_qreg_mr(4096)
     cluster.node("n1").buffer(mr_srv.addr)[:5] = np.frombuffer(
         b"hello", np.uint8)
-    mr = yield from m0.sys_qreg_mr(4096)
-    batch = [
-        WorkRequest(op="READ", wr_id=1, signaled=False, local_mr=mr,
-                    local_off=0, remote_rkey=mr_srv.rkey, remote_off=0,
-                    nbytes=5),
-        WorkRequest(op="READ", wr_id=2, signaled=True, local_mr=mr,
-                    local_off=64, remote_rkey=mr_srv.rkey, remote_off=0,
-                    nbytes=5),
-    ]
     t0 = env.now
-    yield from m0.sys_qpush(qd, batch)
-    ent = yield from m0.qpop_block(qd)
-    data = cluster.node("n0").read_bytes(mr.addr, 0, 5).tobytes()
-    print(f"[data]    2 one-sided READs, 1 roundtrip: {env.now - t0:6.2f}us"
-          f" -> {data!r} (wr_id={ent.user_wr_id})")
+    f1 = sess.read(mr_srv.rkey, 0, 5)     # both futures posted in one
+    f2 = sess.read(mr_srv.rkey, 0, 5)     # tick -> ONE planned doorbell
+    data, _ = yield from sess.wait_all([f1, f2])
+    print(f"[data]    2 one-sided READs, 1 doorbell:  {env.now - t0:6.2f}us"
+          f" -> {data.tobytes()!r}")
+
+    # --- atomic CAS -------------------------------------------------------
+    old = yield from sess.cas(mr_srv.rkey, 64, compare=0, swap=7).wait()
+    now = yield from sess.read(mr_srv.rkey, 64, 8).wait()
+    print(f"[atomic]  CAS(0 -> 7): old={old} now={int(now.view('<u8')[0])}")
+
+    # --- two-sided call/reply (accept semantics) -------------------------
+    lst = yield from listen(m1, 7777, msg_bytes=1024, window=4)
+
+    def echo_server():
+        msgs = yield from lst.recv()
+        for msg in msgs:
+            yield from msg.reply(msg.payload[::-1].copy())
+        return True
+
+    env.process(echo_server(), "echo")
+    csess = yield from connect(m0, "n1", port=7777)
+    t0 = env.now
+    reply = yield from csess.call(b"krcore!").wait()
+    print(f"[2-sided] call() round trip:              {env.now - t0:6.2f}us"
+          f" -> {reply.payload.tobytes()!r}")
     return True
 
 

@@ -12,6 +12,10 @@ Layer map (see DESIGN.md):
   virtqueue.py  the virtualized queue abstraction + wr_id encoding
   module.py     the per-node 'kernel module': Table-1 syscalls, Alg. 1+2,
                 zero-copy protocol, DC<->RC transfer protocol
+  plan.py       the op planner: doorbell/CQE budgeting for batched pushes
+  session.py    the application-facing API: Session / Future / BufferPool
+                / Listener over the queue syscalls (see README.md)
+  legacy.py     DEPRECATED raw sys_q* client helpers (warns on import)
   baselines.py  Verbs / LITE comparison targets
   cluster.py    bring-up helpers
 """
@@ -27,6 +31,10 @@ from .pool import HybridQPPool
 from .virtqueue import (CompEntry, PolledMsg, VirtQueue, decode_wr_id,
                         encode_wr_id)
 from .module import KRCoreError, KRCoreModule, install
+from .plan import BatchPlan, plan_batch
+from .session import (BufferPool, Future, Lease, Listener, Message,
+                      Session, SessionError, connect, from_qd, listen,
+                      raw_session)
 from .baselines import LiteKernel, VerbsProcess
 from .cluster import Cluster, make_cluster
 
@@ -37,6 +45,8 @@ __all__ = [
     "connect_rc_pair", "DCCache", "DCTMeta", "DrTMKV", "KVClient",
     "MetaServer", "MRStore", "ValidMRStore", "HybridQPPool", "CompEntry",
     "PolledMsg", "VirtQueue", "decode_wr_id", "encode_wr_id", "KRCoreError",
-    "KRCoreModule", "install", "LiteKernel", "VerbsProcess", "Cluster",
-    "make_cluster",
+    "KRCoreModule", "install", "BatchPlan", "plan_batch", "BufferPool",
+    "Future", "Lease", "Listener", "Message", "Session", "SessionError",
+    "connect", "from_qd", "listen", "raw_session", "LiteKernel",
+    "VerbsProcess", "Cluster", "make_cluster",
 ]

@@ -150,17 +150,23 @@ class Fabric:
                   local_mr: MemoryRegion, local_off: int,
                   remote_mr: MemoryRegion, remote_off: int,
                   nbytes: int, dct: bool = False,
-                  dct_connect: bool = False) -> Generator:
-        """One-sided READ/WRITE from ``src`` targeting ``dst`` memory.
+                  dct_connect: bool = False, compare: int = 0,
+                  swap: int = 0) -> Generator:
+        """One-sided READ/WRITE/CAS from ``src`` targeting ``dst`` memory.
 
         Bypasses the destination CPU entirely (only NIC engine time there).
         Raises MRError on invalid access — the caller (QP) moves to an error
-        state, mirroring hardware behaviour.
+        state, mirroring hardware behaviour. CAS is an 8-byte atomic: the
+        read-compare-swap happens at a single simulation instant at the
+        destination NIC (no yield between read and write), and the
+        previous value returns to (local_mr, local_off).
         """
         cm = self.cm
         extra = cm.dct_op_extra_us if dct else 0.0
         if dct_connect:
             extra += cm.dct_connect_us
+        if op == "CAS":
+            nbytes = 8
         if not dst.alive:
             # retry timeout at the initiator NIC, then transport error
             yield self.env.timeout(12.0)
@@ -169,11 +175,12 @@ class Fabric:
         remote_mr.check(remote_off, nbytes)
         # request issue at the source NIC
         yield from self._engine(src, cm.nic_op_us + extra)
-        # request flight (header-only for READ, header+payload for WRITE)
-        req_payload = nbytes if op == "WRITE" else 0
+        # request flight (header-only for READ, header+payload for WRITE,
+        # compare+swap operands for CAS)
+        req_payload = nbytes if op in ("WRITE", "CAS") else 0
         yield self.env.timeout(cm.wire_us + cm.payload_us(req_payload))
         # destination NIC DMA (CPU bypass)
-        resp_payload = nbytes if op == "READ" else 0
+        resp_payload = nbytes if op in ("READ", "CAS") else 0
         yield from self._engine(dst, cm.nic_op_us
                                 + cm.payload_us(max(req_payload, resp_payload)))
         if op == "READ":
@@ -182,6 +189,13 @@ class Fabric:
         elif op == "WRITE":
             data = src.read_bytes(local_mr.addr, local_off, nbytes)
             dst.write_bytes(remote_mr.addr, remote_off, data)
+        elif op == "CAS":
+            old = dst.read_bytes(remote_mr.addr, remote_off, 8)
+            if int(old.view(np.uint64)[0]) == (compare & 0xFFFFFFFFFFFFFFFF):
+                new = np.array([swap & 0xFFFFFFFFFFFFFFFF],
+                               np.uint64).view(np.uint8)
+                dst.write_bytes(remote_mr.addr, remote_off, new)
+            src.write_bytes(local_mr.addr, local_off, old)
         else:
             raise FabricError(f"bad one-sided op {op}")
         # response flight + source-side completion

@@ -16,14 +16,14 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-import time
 from collections import deque
 from typing import Deque, Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
-from .fabric import Fabric, MemoryRegion, Node
-from .qp import QP, QPType, WorkRequest
+from .fabric import MemoryRegion, Node
+from .qp import QP
+from .session import BufferPool, SessionError, raw_session
 
 SLOT = 32
 _KEY = struct.Struct("<Q")
@@ -94,50 +94,56 @@ class DrTMKV:
 
 
 class KVClient:
-    """Client handle: one-sided lookup over an established QP.
+    """Client handle: one-sided lookups through a kernel-internal
+    :class:`~repro.core.session.Session` over an established QP.
 
-    ``lookup`` issues one READ per probe; ``get_many`` coalesces one probe
-    READ *per key* into a single doorbell batch (selective signaling: only
-    the batch's last WR generates a CQE) and falls back to further probe
-    rounds only for the keys that collided — the Storm-style batched
-    one-sided discipline.
+    ``lookup`` issues one READ future per probe; ``get_many`` posts one
+    probe READ *per key* inside a ``session.batch()`` scope, so each round
+    lowers to a single planned doorbell (selective signaling: one CQE per
+    round) and only collided keys advance to the next round — the
+    Storm-style batched one-sided discipline, now owned by the session's
+    op planner instead of hand-rolled WR lists.
 
-    Scratch layout: single-key lookups use ``scratch_off`` (one slot);
-    batched lookups land probe ``j`` of a round at ``batch_scratch_off +
-    j * SLOT`` so they never stomp the single-slot region (or the module's
-    MR-check slot at offset 64 when sharing the module scratch).
+    Scratch is leased from a :class:`BufferPool` wrapped around the
+    caller's ``scratch_mr`` starting at ``batch_scratch_off``, so client
+    probes can never stomp the module's MR-check slot (offset 64) when
+    sharing the module scratch region.
     """
 
     def __init__(self, qp: QP, server: DrTMKV, scratch_mr: MemoryRegion,
                  scratch_off: int = 0, batch_scratch_off: int = 128):
+        # scratch_off is accepted for source compatibility with the
+        # pre-session constructor but unused: ALL lookups (single-key
+        # included) lease from the pool region at batch_scratch_off now,
+        # so the dedicated single-slot region no longer exists.
+        del scratch_off
         self.qp = qp
         self.server = server
         self.scratch_mr = scratch_mr
-        self.scratch_off = scratch_off
         self.batch_scratch_off = batch_scratch_off
+        pool = BufferPool(mr=scratch_mr, base_off=batch_scratch_off,
+                          align=SLOT)
+        if pool.capacity(SLOT) < 1:
+            # fail loudly at construction: a silent lease failure inside
+            # lookup() would read as "key absent" for every key
+            raise ValueError(
+                f"scratch_mr too small for lookups: need "
+                f"batch_scratch_off ({batch_scratch_off}) + SLOT ({SLOT}) "
+                f"bytes, have {scratch_mr.length}")
+        self.session = raw_session(qp, dst=server.node.name, pool=pool)
+        self.session.poll_us = 0.05           # meta lookups poll tightly
 
-    def lookup(self, key: bytes, max_probes: int = 8
-               ) -> Generator:
+    def lookup(self, key: bytes, max_probes: int = 8) -> Generator:
         """yields sim events; returns value bytes or None."""
         h = fnv1a(key)
-        env = self.qp.env
         for probe in range(max_probes):
-            idx = (h + probe) % self.server.n_slots
-            wr = WorkRequest(
-                op="READ", wr_id=0x4D45, signaled=True,
-                local_mr=self.scratch_mr, local_off=self.scratch_off,
-                remote_rkey=self.server.mr.rkey, remote_off=idx * SLOT,
-                nbytes=SLOT, dst=self.server.node.name)
-            self.qp.post_send([wr])
-            while True:                         # poll for the completion
-                cqes = self.qp.poll_cq()
-                if cqes:
-                    break
-                yield env.timeout(0.05)
-            if cqes[0].status != "OK":
-                return None                     # server down / MR revoked
-            raw = self.qp.node.read_bytes(
-                self.scratch_mr.addr, self.scratch_off, SLOT)
+            fut = self.session.read(
+                self.server.mr.rkey,
+                ((h + probe) % self.server.n_slots) * SLOT, SLOT)
+            try:
+                raw = yield from fut.wait()
+            except SessionError:
+                return None                   # server down / MR revoked
             k, val = DrTMKV.parse_slot(raw)
             if k == h:
                 return val
@@ -148,67 +154,45 @@ class KVClient:
     def get_many(self, keys: List[bytes], max_probes: int = 8
                  ) -> Generator:
         """Batched lookup: returns ``List[Optional[bytes]]`` aligned with
-        ``keys``. Each round posts ONE doorbell batch carrying one probe
-        READ per still-unresolved key (only the last WR signaled -> one
-        CQE per batch); only collided keys advance to the next round.
+        ``keys``. Each round batches one probe READ per still-unresolved
+        key into ONE planned doorbell; only collided keys re-probe.
 
-        Rounds are PIPELINED through two scratch banks: round r+1 (the
-        next chunk of pending keys, including any collision re-probes
-        already resolved) is posted behind round r's doorbell while r is
-        still in flight, instead of synchronizing per chunk. CQEs of a
-        FIFO QP complete in posting order, so the oldest in-flight bank
-        is always the one a polled CQE retires.
+        Rounds are PIPELINED through the scratch pool: two rounds' leases
+        fit side by side, and round r+1 is posted behind round r's
+        doorbell while r is still in flight (futures decouple posting
+        from completion), instead of synchronizing per chunk.
         """
         results: List[Optional[bytes]] = [None] * len(keys)
         if not keys:
             return results
-        env = self.qp.env
         hashes = [fnv1a(k) for k in keys]
-        cap = min((self.scratch_mr.length - self.batch_scratch_off) // SLOT,
+        cap = min(self.session.pool.capacity(SLOT),
                   self.qp.sq_depth, self.qp.cq_depth - 1)
         if cap < 1:
             raise ValueError("scratch too small for batched lookup")
         n_banks = 2 if cap >= 2 else 1
         bank_cap = cap // n_banks
-        free_banks = deque(range(n_banks))
-        inflight: Deque[Tuple[List[Tuple[int, int]], int]] = deque()
+        inflight: Deque[Tuple[List[Tuple[int, int]], List]] = deque()
         pending: List[Tuple[int, int]] = [(i, 0) for i in range(len(keys))]
         failed = False
         while pending or inflight:
-            if pending and free_banks and not failed:
-                bank = free_banks.popleft()
+            if pending and len(inflight) < n_banks and not failed:
                 chunk, pending = pending[:bank_cap], pending[bank_cap:]
-                wrs = []
-                for j, (i, probe) in enumerate(chunk):
-                    idx = (hashes[i] + probe) % self.server.n_slots
-                    wrs.append(WorkRequest(
-                        op="READ", wr_id=0x4D42,
-                        signaled=(j == len(chunk) - 1),
-                        local_mr=self.scratch_mr,
-                        local_off=self.batch_scratch_off
-                        + (bank * bank_cap + j) * SLOT,
-                        remote_rkey=self.server.mr.rkey,
-                        remote_off=idx * SLOT,
-                        nbytes=SLOT, dst=self.server.node.name))
-                self.qp.post_send(wrs)
-                inflight.append((chunk, bank))
-                continue                      # post before polling
-            while True:                       # one CQE covers the batch
-                cqes = self.qp.poll_cq()
-                if cqes:
-                    break
-                yield env.timeout(0.05)
-            chunk, bank = inflight.popleft()
-            free_banks.append(bank)
-            if cqes[0].status != "OK":
+                with self.session.batch():
+                    futs = [self.session.read(
+                        self.server.mr.rkey,
+                        ((hashes[i] + probe) % self.server.n_slots) * SLOT,
+                        SLOT) for (i, probe) in chunk]
+                inflight.append((chunk, futs))
+                continue                      # post before waiting
+            chunk, futs = inflight.popleft()
+            try:
+                raws = yield from self.session.wait_all(futs)
+            except SessionError:
                 failed = True                 # server down / MR revoked:
                 pending = []                  # drain in-flight, then stop
                 continue
-            for j, (i, probe) in enumerate(chunk):
-                raw = self.qp.node.read_bytes(
-                    self.scratch_mr.addr,
-                    self.batch_scratch_off + (bank * bank_cap + j) * SLOT,
-                    SLOT)
+            for (i, probe), raw in zip(chunk, raws):
                 k, val = DrTMKV.parse_slot(raw)
                 if k == hashes[i]:
                     results[i] = val

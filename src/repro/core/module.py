@@ -357,7 +357,7 @@ class KRCoreModule:
                 self._check_request(vq, req)
             except KRCoreError:
                 return -1                                   # Alg.2 line 8
-            if req.op in ("READ", "WRITE"):
+            if req.op in ("READ", "WRITE", "CAS"):
                 ok = yield from self._check_remote_mr(vq, req)
                 if not ok:
                     return -1                               # Alg.2 line 8
@@ -384,19 +384,23 @@ class KRCoreModule:
             progressed = self._qpop_inner(vq)
             if not progressed:
                 yield self.env.timeout(0.2)
-        # keep the CQ from overrunning too: voluntary poll when near-full
-        while len(qp.cq) > qp.cq_depth - len(wr_list) - 1:
+        # keep the CQ from overrunning too: reserve against BOTH queued
+        # CQEs and CQEs still owed by in-flight signaled WRs — an
+        # out-of-order completion cascade can mint all of the owed ones
+        # at a single instant, faster than any voluntary poll cadence
+        while (len(qp.cq) + qp.cq_outstanding
+               > qp.cq_depth - len(wr_list) - 1):
             if not self._qpop_inner(vq):
                 yield self.env.timeout(0.2)
 
         # ---- selective signaling + wr_id encoding (lines 5-22) ----------
         unsignaled_cnt = 0
+        entries: List[CompEntry] = []
         for req in wr_list:
             self._fill_routing(vq, req)
             if req.signaled:
-                vq.comp_queue.append(CompEntry(NOT_READY, req.wr_id,
-                                               covers=unsignaled_cnt + 1))
-                vq.uncomp_cnt += unsignaled_cnt + 1
+                entries.append(CompEntry(NOT_READY, req.wr_id,
+                                         covers=unsignaled_cnt + 1))
                 req.wr_id = encode_wr_id(vq.id, unsignaled_cnt + 1)
                 unsignaled_cnt = 0
             else:
@@ -416,7 +420,14 @@ class KRCoreModule:
         for req in wr_list:
             if req.op == "SEND" and req.nbytes > cm.kernel_msg_buf_bytes:
                 self._to_zero_copy(vq, req)
+        # post first, queue after: post_send validates before mutating, so
+        # a raise here (QP flipped to ERR by an earlier in-flight failure)
+        # leaves NO never-ready CompEntries behind — earlier segments stay
+        # consistent and the caller can account exactly what posted
         qp.post_send(wr_list)                               # line 23
+        vq.comp_queue.extend(entries)
+        vq.uncomp_cnt += sum(e.covers for e in entries)
+        vq.stat_entries_queued += len(entries)
 
     def sys_qpop(self, qd: int) -> Generator:
         """Algorithm 2, qpop: non-blocking; returns CompEntry or None."""
@@ -495,9 +506,11 @@ class KRCoreModule:
 
     def _check_request(self, vq: VirtQueue, req: WorkRequest) -> None:
         """Malformed-request detection (§4.4 factor 1)."""
-        if req.op not in ("READ", "WRITE", "SEND"):
+        if req.op not in ("READ", "WRITE", "SEND", "CAS"):
             raise KRCoreError(f"invalid opcode {req.op!r}")
-        if req.op in ("READ", "WRITE"):
+        if req.op == "CAS" and req.nbytes != 8:
+            raise KRCoreError("CAS is an 8-byte atomic")
+        if req.op in ("READ", "WRITE", "CAS"):
             if req.local_mr is None:
                 raise KRCoreError("missing local MR")
             try:
@@ -766,7 +779,9 @@ class KRCoreModule:
                     reply_qd=self._make_reply_qd(header, vq),
                     wr_id=ent.wr_id, byte_len=n,
                     src=header.get("src", "?"),
-                    src_vq=header.get("src_vq", 0)))
+                    src_vq=header.get("src_vq", 0), hdr=dict(header)))
+            if vq.msg_notify is not None:
+                vq.msg_notify.put(len(run))
         for header, payload in later:
             self._staged.setdefault(vq.id, deque()).append((header, payload))
 
@@ -799,7 +814,9 @@ class KRCoreModule:
         vq.msg_queue.append(PolledMsg(
             reply_qd=self._make_reply_qd(header, vq),
             wr_id=ent.wr_id, byte_len=n,
-            src=src, src_vq=header.get("src_vq", 0)))
+            src=src, src_vq=header.get("src_vq", 0), hdr=dict(header)))
+        if vq.msg_notify is not None:
+            vq.msg_notify.put(1)
 
     def _make_reply_qd(self, header: dict, listener: VirtQueue) -> int:
         """accept semantics: a VirtQueue connected back to the sender, built

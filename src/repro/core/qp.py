@@ -46,7 +46,7 @@ class QPState(enum.Enum):
     ERR = 4
 
 
-VALID_OPS = ("READ", "WRITE", "SEND")
+VALID_OPS = ("READ", "WRITE", "SEND", "CAS")
 
 
 @dataclasses.dataclass
@@ -60,6 +60,10 @@ class WorkRequest:
     remote_rkey: int = 0
     remote_off: int = 0
     nbytes: int = 0
+    # atomic fields (op == "CAS": 8-byte compare-and-swap; the previous
+    # remote value lands at (local_mr, local_off))
+    compare: int = 0
+    swap: int = 0
     # two-sided fields
     payload: Optional[np.ndarray] = None
     header: Optional[dict] = None
@@ -113,6 +117,13 @@ class QP:
         self.cq_depth = cq_depth or cm.cq_depth
         # occupancy counters (hardware view)
         self.sq_occupancy = 0
+        #: CQEs still OWED by in-flight signaled WRs (posted, CQE not yet
+        #: generated). len(cq) + cq_outstanding is the true CQ pressure: a
+        #: completion cascade (_flush_in_order draining an out-of-order
+        #: done buffer) can mint that many CQEs at ONE instant, so
+        #: overrun-safe posting must reserve against it, not against
+        #: len(cq) alone.
+        self.cq_outstanding = 0
         self.cq: Deque[Completion] = deque()
         self.recv_cq: Deque[Completion] = deque()
         self.posted_recvs: Deque[RecvBuffer] = deque()
@@ -177,6 +188,7 @@ class QP:
         """
         self.sq_occupancy = 0
         self.cq.clear()
+        self.cq_outstanding = 0
         self._done_buffer.clear()
         self._uncovered = 0
         self._next_complete = self._next_seq
@@ -213,6 +225,7 @@ class QP:
         self.stat_doorbells += 1
         for wr in wrs:
             self.sq_occupancy += 1
+            self.cq_outstanding += int(wr.signaled)
             self.stat_posted += 1
             seq = self._next_seq
             self._next_seq += 1
@@ -258,14 +271,15 @@ class QP:
         try:
             dst, dst_qpn, reconnect = self._route(wr)
             dct = self.qptype == QPType.DC
-            if wr.op in ("READ", "WRITE"):
+            if wr.op in ("READ", "WRITE", "CAS"):
                 remote_mr = dst.lookup_mr(wr.remote_rkey)
                 if remote_mr is None:
                     raise MRError(f"rkey {wr.remote_rkey} unknown at {dst.name}")
                 yield from self.fabric.one_sided(
                     wr.op, self.node, dst, wr.local_mr, wr.local_off,
                     remote_mr, wr.remote_off, wr.nbytes,
-                    dct=dct, dct_connect=reconnect)
+                    dct=dct, dct_connect=reconnect,
+                    compare=wr.compare, swap=wr.swap)
             elif wr.op == "SEND":
                 header = dict(wr.header or {})
                 header.setdefault("src", self.node.name)
@@ -302,6 +316,8 @@ class QP:
             self._next_complete += 1
             self.stat_completed += 1
             self._uncovered += 1
+            if wr.signaled:
+                self.cq_outstanding = max(0, self.cq_outstanding - 1)
             if wr.signaled or status == "ERR":
                 if len(self.cq) >= self.cq_depth:
                     self._to_error("CQ overrun")     # Fig 13b LITE failure

@@ -86,12 +86,17 @@ class RecvEntry:
 
 @dataclasses.dataclass
 class PolledMsg:
-    """What qpop_msgs returns per message (paper adds `accept` semantics)."""
+    """What qpop_msgs returns per message (paper adds `accept` semantics).
+
+    ``hdr`` carries the sender's application header (routing keys plus any
+    caller metadata set via Session.send(meta=...)) — the session layer
+    correlates call/reply pairs through it."""
     reply_qd: int
     wr_id: int
     byte_len: int
     src: str
     src_vq: int
+    hdr: Optional[dict] = None
 
 
 class VirtQueue:
@@ -122,6 +127,14 @@ class VirtQueue:
         #: outstanding WRs a queued-but-unpopped CompEntry will retire
         #: (selective-signaling software accounting; 0 at quiescence)
         self.uncomp_cnt = 0
+        #: optional Store the module pokes whenever a message lands in
+        #: msg_queue — lets Listener.recv block event-driven instead of
+        #: busy-spinning (set by the session layer, None otherwise)
+        self.msg_notify = None
+        #: monotonic count of CompEntries ever queued on this vq — lets
+        #: the session layer tell how much of a batch actually posted
+        #: when a push dies part-way (QP flipped to ERR mid-batch)
+        self.stat_entries_queued = 0
 
     # ------------------------------------------------------------ helpers
     @property

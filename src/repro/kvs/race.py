@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.fabric import MemoryRegion, Node
 from repro.core.module import KRCoreModule
-from repro.core.qp import WorkRequest
+from repro.core.session import Session, connect
 
 NSLOT = 8
 SLOT_BYTES = 16
@@ -79,12 +79,14 @@ class RaceKVStore:
 
 
 class RaceClient:
-    """Compute-node client: one-sided lookups through KRCORE.
+    """Compute-node client: one-sided lookups through a KRCORE Session.
 
-    ``lookup`` is the paper's Fig 7 example (2 READs, one doorbell);
-    ``lookup_many`` extends the same discipline across keys: ALL bucket
-    READs of a chunk of keys ride one ``qpush_batch`` doorbell (one syscall
-    crossing, one CQE), then every key's slots are compared locally.
+    ``lookup`` is the paper's Fig 7 example (2 READs, one doorbell — the
+    session's op planner coalesces the two futures posted in one batch
+    scope); ``lookup_many`` extends the same discipline across keys: ALL
+    bucket READs of a chunk ride one planned doorbell (one syscall
+    crossing, one CQE per chunk), then every key's slots are compared
+    locally.
     """
 
     BUCKET_BYTES = NSLOT * SLOT_BYTES
@@ -94,39 +96,29 @@ class RaceClient:
         self.module = module
         self.store = store
         self.mr_bytes = mr_bytes
+        self.session: Optional[Session] = None
         self.qd: Optional[int] = None
-        self.mr: Optional[MemoryRegion] = None
 
     def bootstrap(self) -> Generator:
-        """The elastic-scaling critical path: queue + qconnect + qreg_mr.
-        With KRCORE this is microseconds; with Verbs it is ~16 ms."""
-        self.qd = yield from self.module.sys_queue()
-        rc = yield from self.module.sys_qconnect(
-            self.qd, self.store.node.name)
-        assert rc == 0
-        self.mr = yield from self.module.sys_qreg_mr(self.mr_bytes)
+        """The elastic-scaling critical path: connect() = queue +
+        qconnect + a scratch pool. With KRCORE this is microseconds; with
+        Verbs it is ~16 ms."""
+        self.session = yield from connect(self.module,
+                                          self.store.node.name,
+                                          pool_bytes=self.mr_bytes)
+        self.qd = self.session.qd
         return self.qd
 
     def lookup(self, key: int) -> Generator:
         """Two bucket READs in ONE doorbell batch (Fig 7), then local
         slot compare. Returns value bytes or None."""
         off1, off2 = self.store.bucket_offsets(key)
-        reqs = [
-            WorkRequest(op="READ", wr_id=1, signaled=False,
-                        local_mr=self.mr, local_off=0,
-                        remote_rkey=self.store.mr.rkey, remote_off=off1,
-                        nbytes=self.BUCKET_BYTES),
-            WorkRequest(op="READ", wr_id=2, signaled=True,
-                        local_mr=self.mr, local_off=self.BUCKET_BYTES,
-                        remote_rkey=self.store.mr.rkey, remote_off=off2,
-                        nbytes=self.BUCKET_BYTES),
-        ]
-        rc = yield from self.module.sys_qpush(self.qd, reqs)
-        assert rc == 0
-        yield from self.module.qpop_block(self.qd)
-        raw = self.module.node.read_bytes(self.mr.addr, 0,
-                                          2 * self.BUCKET_BYTES)
-        return self._scan_buckets(raw.tobytes(), key)
+        with self.session.batch():
+            futs = [self.session.read(self.store.mr.rkey, off,
+                                      self.BUCKET_BYTES)
+                    for off in (off1, off2)]
+        b1, b2 = yield from self.session.wait_all(futs)
+        return self._scan_buckets(b1.tobytes() + b2.tobytes(), key)
 
     @staticmethod
     def _scan_buckets(raw: bytes, key: int) -> Optional[bytes]:
@@ -140,32 +132,23 @@ class RaceClient:
 
     def lookup_many(self, keys: List[int]) -> Generator:
         """Batched lookup: both bucket READs of EVERY key in a chunk ride
-        one qpush_batch doorbell (one syscall + one CQE per chunk vs two
+        one planned doorbell (one syscall + one CQE per chunk vs two
         syscalls + a CQE per key). Returns values aligned with ``keys``."""
         results: List[Optional[bytes]] = [None] * len(keys)
         per_key = 2 * self.BUCKET_BYTES
-        cap = self.mr.length // per_key
-        assert cap >= 1, "client MR smaller than one bucket pair"
+        cap = max(self.mr_bytes // per_key, 1)
         for base in range(0, len(keys), cap):
             chunk = keys[base:base + cap]
-            reqs = []
-            for j, key in enumerate(chunk):
-                off1, off2 = self.store.bucket_offsets(key)
-                for half, off in enumerate((off1, off2)):
-                    reqs.append(WorkRequest(
-                        op="READ", wr_id=2 * j + half, signaled=False,
-                        local_mr=self.mr,
-                        local_off=j * per_key + half * self.BUCKET_BYTES,
-                        remote_rkey=self.store.mr.rkey, remote_off=off,
-                        nbytes=self.BUCKET_BYTES))
-            n_cqes = yield from self.module.qpush_batch(self.qd, reqs)
-            assert n_cqes > 0
-            yield from self.module.qpop_batch_block(self.qd, n_cqes)
-            raw = self.module.node.read_bytes(
-                self.mr.addr, 0, len(chunk) * per_key).tobytes()
+            with self.session.batch():
+                futs = []
+                for key in chunk:
+                    for off in self.store.bucket_offsets(key):
+                        futs.append(self.session.read(
+                            self.store.mr.rkey, off, self.BUCKET_BYTES))
+            bufs = yield from self.session.wait_all(futs)
             for j, key in enumerate(chunk):
                 results[base + j] = self._scan_buckets(
-                    raw[j * per_key:(j + 1) * per_key], key)
+                    bufs[2 * j].tobytes() + bufs[2 * j + 1].tobytes(), key)
         return results
 
 

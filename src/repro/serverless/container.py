@@ -30,6 +30,7 @@ from typing import Deque, Dict, Generator, Optional, Tuple
 from repro.core import LiteKernel, VerbsProcess
 from repro.core.cluster import Cluster
 from repro.core.fabric import MemoryRegion
+from repro.core.session import Session, connect as kr_connect
 
 from .registry import FunctionDef
 
@@ -85,18 +86,16 @@ class Container:
 
     def connect(self, remote: str,
                 port: Optional[int] = None) -> Generator:
-        """Transport handle to ``remote`` (cached). KRCORE: a VirtQueue qd
-        (microseconds); Verbs: a private RCQP (the 15.7 ms first-connect
-        control path); LITE: the node-shared kernel RCQP (~1.4 ms miss)."""
+        """Transport handle to ``remote`` (cached). KRCORE: a
+        :class:`Session` with typed endpoints (microsecond control path);
+        Verbs: a private RCQP (the 15.7 ms first-connect control path);
+        LITE: the node-shared kernel RCQP (~1.4 ms miss)."""
         key = (remote, port)
         if key in self.conns:
             return self.conns[key]
         if self.transport == "krcore":
-            qd = yield from self.module.sys_queue()
-            rc = yield from self.module.sys_qconnect(qd, remote, port=port)
-            if rc != 0:
-                raise RuntimeError(f"qconnect({remote}) failed")
-            handle: object = qd
+            handle: object = yield from kr_connect(self.module, remote,
+                                                   port=port)
         elif self.transport == "verbs":
             handle = yield from self.proc.connect(self.cluster.node(remote))
         else:
@@ -107,7 +106,9 @@ class Container:
     def drop_connection(self, remote: str) -> None:
         """Forget cached handles to a (dead) remote."""
         for key in [k for k in self.conns if k[0] == remote]:
-            del self.conns[key]
+            handle = self.conns.pop(key)
+            if isinstance(handle, Session):
+                handle.close()
 
 
 @dataclasses.dataclass

@@ -7,11 +7,22 @@ the scheduler, leased a container (warm or cold, :mod:`.container`),
 optionally pulls its input payload from a data node over the container's
 transport, runs, and is released back to the warm pool.
 
+Two completion models:
+
+* **inline** (default, ``caller_node=None``) — the invocation completes
+  when the function body finishes on the worker; no response travels.
+* **closed loop** (``caller_node=...``) — the request rides
+  ``Session.call`` from the caller node to a per-worker listener, the
+  worker serves it (lease + input fetch + compute) and delivers the
+  function's OUTPUT back as the call's reply, so every record's
+  ``total_us`` is true end-to-end latency including response delivery —
+  the Fig 14 analogue measured at the caller.
+
 Every record decomposes the invocation the way Fig 12a/12b decompose a
 request: queueing, fork (container), control plane (connect + MR), data
 plane (payload movement), compute. The benchmarks aggregate these into the
-paper's headline ratios; the tests pin the open-loop and placement
-invariants.
+paper's headline ratios (plus spike-window p99/p999 for the closed loop);
+the tests pin the open-loop and placement invariants.
 """
 
 from __future__ import annotations
@@ -21,8 +32,8 @@ from typing import Dict, Generator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import WorkRequest
 from repro.core.cluster import Cluster
+from repro.core.session import Listener, Session, connect, listen
 
 from .container import Container, ContainerPool
 from .registry import FunctionDef, FunctionRegistry
@@ -41,6 +52,10 @@ class InvocationRecord:
     control_us: float = 0.0
     data_us: float = 0.0
     compute_us: float = 0.0
+    #: True when this record was measured closed-loop (request + reply
+    #: over session.call); the request/response wire time is then
+    #: total_us minus queue_us and the worker-side phase fields
+    response_path: bool = False
 
     @property
     def queue_us(self) -> float:
@@ -80,7 +95,9 @@ class InvocationGateway:
     def __init__(self, cluster: Cluster, registry: FunctionRegistry,
                  pool: ContainerPool,
                  worker_nodes: Optional[Sequence[str]] = None,
-                 data_node: Optional[str] = None):
+                 data_node: Optional[str] = None,
+                 caller_node: Optional[str] = None,
+                 response_base_port: int = 7040):
         self.cluster = cluster
         self.env = cluster.env
         self.registry = registry
@@ -89,7 +106,12 @@ class InvocationGateway:
         self.scheduler = LeastOutstandingScheduler(names)
         #: node holding invocation input payloads (None: skip the fetch)
         self.data_node = data_node
+        #: closing the loop: node the responses return to (None: inline)
+        self.caller_node = caller_node
+        self.response_base_port = response_base_port
         self._data_mr = None
+        self._worker_listeners: Dict[str, Listener] = {}
+        self._caller_sessions: Dict[str, Session] = {}
         self.records: List[InvocationRecord] = []
         self._next_id = 0
 
@@ -101,6 +123,34 @@ class InvocationGateway:
             self._data_mr = yield from mod.sys_qreg_mr(1 << 20)
         return self._data_mr
 
+    def _ensure_response_path(self, payload_bytes: int) -> Generator:
+        """Per-worker serve listeners + caller sessions, created once.
+
+        Caller-side recv buffers must hold the LARGEST reply any
+        registered function can emit (replies carry fn output, not the
+        input payload), so they are sized from the registry — and
+        re-widened on later traces with bigger payloads."""
+        if self.caller_node is None:
+            return
+        max_out = max((self.registry.get(n).out_bytes
+                       for n in self.registry.names()), default=1024)
+        reply_bytes = max(4096, payload_bytes + 64, max_out + 64)
+        for i, node in enumerate(self.scheduler.nodes):
+            if node in self._worker_listeners:
+                # later traces may need bigger reply buffers: widen
+                self._caller_sessions[node].recv_window(32, reply_bytes)
+                continue
+            mod = self.cluster.module(node)
+            lst = yield from listen(mod, self.response_base_port + i,
+                                    msg_bytes=4096, window=32)
+            self._worker_listeners[node] = lst
+            self.env.process(self._serve_worker(node, lst),
+                             f"gw.serve.{node}")
+            sess = yield from connect(self.cluster.module(self.caller_node),
+                                      node, port=lst.port)
+            sess.recv_window(32, reply_bytes)
+            self._caller_sessions[node] = sess
+
     # ----------------------------------------------------------- admission
     def submit_trace(self, fn_name: str, arrivals: Sequence[float],
                      payload_bytes: int = 1024) -> Generator:
@@ -108,7 +158,11 @@ class InvocationGateway:
         at its trace timestamp; returns when all have completed."""
         fn = self.registry.get(fn_name)
         yield from self._ensure_data_mr()
+        yield from self._ensure_response_path(payload_bytes)
         base = self.env.now
+        #: sim-time epoch of the last submitted trace (t=0 of the trace's
+        #: own clock — window_summary callers anchor on this)
+        self.last_trace_base = base
         procs = []
         for t in arrivals:
             procs.append(self.env.process(
@@ -131,21 +185,89 @@ class InvocationGateway:
         rec.node = node
         rec.start_us = env.now
         try:
-            t0 = env.now
-            kind, container = yield from self.pool.lease(node, fn)
-            rec.kind = kind
-            rec.fork_us = env.now - t0
-            if self.data_node is not None and self.data_node != node:
-                yield from self._fetch_input(container, rec, payload_bytes)
-            t0 = env.now
-            yield env.timeout(fn.compute_us)
-            rec.compute_us = env.now - t0
-            self.pool.release(container)
+            if self.caller_node is not None:
+                yield from self._invoke_closed_loop(fn, node, payload_bytes,
+                                                    rec)
+            else:
+                yield from self._invoke_inline(fn, node, payload_bytes, rec)
         finally:
             self.scheduler.done(node)
         rec.end_us = env.now
         self.records.append(rec)
         return rec
+
+    def _invoke_inline(self, fn: FunctionDef, node: str,
+                       payload_bytes: int, rec: InvocationRecord
+                       ) -> Generator:
+        """Inline completion: done when the function body finishes."""
+        env = self.env
+        t0 = env.now
+        kind, container = yield from self.pool.lease(node, fn)
+        rec.kind = kind
+        rec.fork_us = env.now - t0
+        if self.data_node is not None and self.data_node != node:
+            yield from self._fetch_input(container, rec, payload_bytes)
+        t0 = env.now
+        yield env.timeout(fn.compute_us)
+        rec.compute_us = env.now - t0
+        self.pool.release(container)
+
+    def _invoke_closed_loop(self, fn: FunctionDef, node: str,
+                            payload_bytes: int, rec: InvocationRecord
+                            ) -> Generator:
+        """Closed loop: the request rides session.call to the worker's
+        listener; the reply carries the function output + the worker-side
+        phase decomposition. end_us lands AFTER response delivery."""
+        rec.response_path = True
+        sess = self._caller_sessions[node]
+        request = np.zeros(64, np.uint8)            # invocation descriptor
+        fut = sess.call(request, meta={"fn": fn.name,
+                                       "payload_bytes": payload_bytes,
+                                       "inv": rec.inv_id})
+        reply = yield from fut.wait()
+        t = reply.hdr.get("timings", {})
+        rec.kind = t.get("kind", "?")
+        rec.fork_us = t.get("fork_us", 0.0)
+        rec.control_us = t.get("control_us", 0.0)
+        rec.data_us = t.get("data_us", 0.0)
+        rec.compute_us = t.get("compute_us", 0.0)
+
+    def _serve_worker(self, node: str, listener: Listener) -> Generator:
+        """Worker-side serve loop (event-driven; lives for the run)."""
+        while True:
+            msgs = yield from listener.recv()
+            for msg in msgs:
+                self.env.process(self._serve_one(node, msg),
+                                 f"gw.fn.{node}")
+
+    def _serve_one(self, node: str, msg) -> Generator:
+        env = self.env
+        fn = self.registry.get(msg.hdr["fn"])
+        payload_bytes = int(msg.hdr.get("payload_bytes", 1024))
+        timings: Dict[str, object] = {}
+        t0 = env.now
+        kind, container = yield from self.pool.lease(node, fn)
+        timings["kind"] = kind
+        timings["fork_us"] = env.now - t0
+        rec_proxy = InvocationRecord(inv_id=-1, fn=fn.name, node=node,
+                                     kind=kind, arrival_us=env.now)
+        nbytes = min(payload_bytes, container.mr.length)
+        if self.data_node is not None and self.data_node != node:
+            yield from self._fetch_input(container, rec_proxy,
+                                         payload_bytes)
+            # the fetched input IS the function's argument (registry
+            # contract: handler(payload bytes) -> output bytes)
+            inp = container.node.read_bytes(container.mr.addr, 0, nbytes)
+        else:
+            inp = np.zeros(nbytes, np.uint8)
+        timings["control_us"] = rec_proxy.control_us
+        timings["data_us"] = rec_proxy.data_us
+        t0 = env.now
+        yield env.timeout(fn.compute_us)
+        timings["compute_us"] = env.now - t0
+        self.pool.release(container)
+        out = fn.handler(inp)
+        yield from msg.reply(out, meta={"timings": timings})
 
     def _fetch_input(self, container: Container, rec: InvocationRecord,
                      payload_bytes: int) -> Generator:
@@ -154,21 +276,16 @@ class InvocationGateway:
         env = self.env
         t0 = env.now
         handle = yield from container.connect(self.data_node)
-        rec.control_us = env.now - t0
+        rec.control_us += env.now - t0
         t0 = env.now
         nbytes = min(payload_bytes, container.mr.length)
         if container.transport == "krcore":
-            mod = container.module
-            wr = WorkRequest(op="READ", wr_id=1, local_mr=container.mr,
-                             local_off=0, remote_rkey=self._data_mr.rkey,
-                             remote_off=0, nbytes=nbytes)
-            rc = yield from mod.sys_qpush(handle, [wr])
-            if rc != 0:
-                raise RuntimeError("input fetch rejected")
-            ent = yield from mod.qpop_block(handle)
-            if ent.err:
-                raise RuntimeError("input fetch errored")
+            sess: Session = handle
+            fut = sess.read(self._data_mr.rkey, 0, nbytes,
+                            into=(container.mr, 0))
+            yield from fut.wait()
         else:
+            from repro.core import WorkRequest
             qp = handle
             qp.post_send([WorkRequest(
                 op="READ", wr_id=1, signaled=True, local_mr=container.mr,
@@ -176,7 +293,7 @@ class InvocationGateway:
                 remote_off=0, nbytes=nbytes)])
             while not qp.poll_cq():
                 yield env.timeout(0.1)
-        rec.data_us = env.now - t0
+        rec.data_us += env.now - t0
 
     # ------------------------------------------------------------- reports
     def summary(self) -> Dict[str, float]:
@@ -190,6 +307,7 @@ class InvocationGateway:
             "n": len(self.records),
             "p50_us": float(np.percentile(tot, 50)),
             "p99_us": float(np.percentile(tot, 99)),
+            "p999_us": float(np.percentile(tot, 99.9)),
             "mean_us": float(tot.mean()),
             "cold": len(cold),
             "warm": len(warm),
@@ -206,3 +324,18 @@ class InvocationGateway:
             per_node[r.node] = per_node.get(r.node, 0) + 1
         out["max_node_share"] = max(per_node.values()) / len(self.records)
         return out
+
+    def window_summary(self, lo_us: float, hi_us: float) -> Dict[str, float]:
+        """Tail latency of records ARRIVING inside [lo, hi) — the
+        spike-window slice of the Fig 14 analogue."""
+        recs = [r for r in self.records if lo_us <= r.arrival_us < hi_us]
+        if not recs:
+            return {"n": 0}
+        tot = np.array([r.total_us for r in recs])
+        return {
+            "n": len(recs),
+            "p50_us": float(np.percentile(tot, 50)),
+            "p99_us": float(np.percentile(tot, 99)),
+            "p999_us": float(np.percentile(tot, 99.9)),
+            "mean_us": float(tot.mean()),
+        }

@@ -103,9 +103,13 @@ def given(*strategies: Strategy, **kw_strategies: Strategy) -> Callable:
                     raise AssertionError(
                         f"falsifying example #{i} for {fn.__name__}: "
                         f"args={args!r} kwargs={kwargs!r}") from e
-        # hide the drawn parameters from pytest's fixture resolution
+        # hide the drawn parameters from pytest's fixture resolution.
+        # __wrapped__ (set by functools.wraps) must be REMOVED, not set to
+        # None: pytest's source introspection follows it when rendering a
+        # failure, and a None there turns every failing example into an
+        # INTERNALERROR instead of a readable traceback.
         wrapper.__signature__ = inspect.Signature()
-        wrapper.__wrapped__ = None
+        del wrapper.__dict__["__wrapped__"]
         return wrapper
     return deco
 

@@ -1,0 +1,469 @@
+"""Session-layer invariants: the op planner's doorbell/CQE budget exactly
+matches hand-rolled qpush_batch plans (property-tested over random op
+mixes), Future results equal sys_qpop-polled results op-for-op, errored
+flushes fail only their own futures (vq-ownership routing) and leave the
+session usable after recovery, BufferPool lease accounting, CAS atomics,
+call/reply correlation, and the deprecated legacy shim surface."""
+
+import math
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BufferPool, SessionError, WorkRequest, connect,
+                        listen, make_cluster, plan_batch)
+from repro.core.plan import effective_interval, segment_limit
+from repro.core.qp import QPState
+
+
+def build_cluster(n_nodes=2):
+    return make_cluster(n_nodes=n_nodes, n_meta=1)
+
+
+# =================================== planner vs hand-rolled qpush_batch
+@st.composite
+def mix_config(draw):
+    n = draw(st.integers(1, 120))
+    sq_depth = draw(st.integers(4, 48))
+    cq_depth = draw(st.integers(4, 48))
+    interval = draw(st.integers(1, 24))
+    n_writes = draw(st.integers(0, n))
+    return n, sq_depth, cq_depth, interval, n_writes
+
+
+def _run_manual(cfg):
+    """Hand-rolled qpush_batch of a READ/WRITE mix; returns measured
+    (doorbells, n_cqes, covers)."""
+    n, sq_depth, cq_depth, interval, n_writes = cfg
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    for qp in m0.pools[0].dc_qps:
+        qp.sq_depth, qp.cq_depth = sq_depth, cq_depth
+    out = {}
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(8192)
+        mr = yield from m0.sys_qreg_mr(8192)
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        wrs = [WorkRequest(op="WRITE" if i < n_writes else "READ",
+                           wr_id=i, local_mr=mr, local_off=64 * (i % 8),
+                           remote_rkey=mr_srv.rkey, remote_off=64 * (i % 8),
+                           nbytes=8) for i in range(n)]
+        # warm the MRStore so validation posts no probe READs of its own
+        # (probes share the pool QP and would pollute the doorbell count)
+        rc = yield from m0.sys_qpush(qd, [WorkRequest(
+            op="READ", wr_id=0, local_mr=mr, local_off=0,
+            remote_rkey=mr_srv.rkey, remote_off=0, nbytes=8)])
+        assert rc == 0
+        yield from m0.qpop_block(qd)
+        qp = m0.vqs[qd].qp
+        d0 = qp.stat_doorbells
+        n_cqes = yield from m0.qpush_batch(qd, wrs,
+                                           signal_interval=interval)
+        ents = yield from m0.qpop_batch_block(qd, n_cqes)
+        out["doorbells"] = qp.stat_doorbells - d0
+        out["n_cqes"] = n_cqes
+        out["covers"] = [e.covers for e in ents]
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+    return out
+
+
+def _run_session(cfg):
+    """The same mix through Session futures; returns measured counts plus
+    the values (bytes for READs, entries for WRITEs)."""
+    n, sq_depth, cq_depth, interval, n_writes = cfg
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    for qp in m0.pools[0].dc_qps:
+        qp.sq_depth, qp.cq_depth = sq_depth, cq_depth
+    out = {}
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(8192)
+        cluster.node("n1").buffer(mr_srv.addr)[:] = 7
+        sess = yield from connect(m0, "n1", signal_interval=interval)
+        # warm pool + MRStore outside the measured batch
+        yield from sess.read(mr_srv.rkey, 0, 8).wait()
+        qp = sess.qp
+        d0 = qp.stat_doorbells
+        with sess.batch():
+            # writes land in the upper half so the reads' region keeps
+            # its known byte pattern
+            futs = [sess.write(mr_srv.rkey, 4096 + 64 * (i % 8), b"x" * 8)
+                    if i < n_writes else sess.read(mr_srv.rkey, 0, 8)
+                    for i in range(n)]
+        vals = yield from sess.wait_all(futs)
+        out["doorbells"] = qp.stat_doorbells - d0
+        out["vals"] = vals
+        out["uncomp"] = m0.vqs[sess.qd].uncomp_cnt
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(mix_config())
+def test_planner_budget_matches_manual_qpush_batch(cfg):
+    """Acceptance criterion: for random op mixes and queue shapes, the
+    planner's doorbell + CQE budget EQUALS the measured hand-rolled
+    qpush_batch plan — plan_batch is a faithful model, and the session
+    path hits the identical budget."""
+    n, sq_depth, cq_depth, interval, _ = cfg
+    plan = plan_batch(n, sq_depth, cq_depth, interval)
+    manual = _run_manual(cfg)
+    # planner == hardware (hand-rolled path)
+    assert manual["n_cqes"] == plan.n_cqes
+    assert manual["doorbells"] == plan.n_doorbells
+    assert manual["covers"] == list(plan.covers)
+    # the exact ceil(N / interval_eff) contract
+    k_eff = effective_interval(interval, sq_depth, cq_depth)
+    assert plan.n_cqes == math.ceil(n / k_eff)
+    assert sum(plan.covers) == n
+    assert max(plan.segments) <= segment_limit(sq_depth, cq_depth)
+    # session auto-batching hits the same doorbell budget
+    sess = _run_session(cfg)
+    assert sess["doorbells"] == plan.n_doorbells
+    assert sess["uncomp"] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(mix_config())
+def test_future_results_equal_syscall_polled_results(cfg):
+    """Futures must carry exactly what the sys_qpop path observes: every
+    READ future resolves to the bytes a manual read lands, every WRITE
+    future's entry covers/err match, op-for-op."""
+    n, sq_depth, cq_depth, interval, n_writes = cfg
+    manual = _run_manual(cfg)
+    sess = _run_session(cfg)
+    vals = sess["vals"]
+    assert len(vals) == n
+    for i, v in enumerate(vals):
+        if i < n_writes:
+            assert not v.err          # WRITE future -> its CompEntry
+        else:
+            assert v.tobytes() == b"\x07" * 8   # READ future -> the bytes
+    # and the CQE budget both paths drained is identical
+    assert manual["n_cqes"] == plan_batch(n, sq_depth, cq_depth,
+                                          interval).n_cqes
+
+
+def test_reads_and_writes_move_real_bytes():
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        sess = yield from connect(m0, "n1")
+        yield from sess.write(mr_srv.rkey, 128, b"sessionlayer").wait()
+        got = yield from sess.read(mr_srv.rkey, 128, 12).wait()
+        assert got.tobytes() == b"sessionlayer"
+        # write from an explicit MR range
+        mr = yield from m0.sys_qreg_mr(256)
+        cluster.node("n0").buffer(mr.addr)[:4] = 9
+        yield from sess.write(mr_srv.rkey, 0, src=(mr, 0, 4)).wait()
+        got = yield from sess.read(mr_srv.rkey, 0, 4).wait()
+        assert (got == 9).all()
+        # read into an explicit MR range resolves to the entry
+        ent = yield from sess.read(mr_srv.rkey, 128, 12,
+                                   into=(mr, 64)).wait()
+        assert not ent.err
+        assert cluster.node("n0").read_bytes(
+            mr.addr, 64, 12).tobytes() == b"sessionlayer"
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+# ============================================================== atomics
+def test_cas_atomic_compare_and_swap():
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        sess = yield from connect(m0, "n1")
+        old = yield from sess.cas(mr_srv.rkey, 0, compare=0, swap=41).wait()
+        assert old == 0
+        # failed compare: value unchanged, old value returned
+        old = yield from sess.cas(mr_srv.rkey, 0, compare=7, swap=99).wait()
+        assert old == 41
+        got = yield from sess.read(mr_srv.rkey, 0, 8).wait()
+        assert int(got.view(np.uint64)[0]) == 41
+        # successful swap
+        old = yield from sess.cas(mr_srv.rkey, 0, compare=41,
+                                  swap=1 << 40).wait()
+        assert old == 41
+        got = yield from sess.read(mr_srv.rkey, 0, 8).wait()
+        assert int(got.view(np.uint64)[0]) == 1 << 40
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+# ====================================== error scoping + recovery (reg.)
+def test_errored_flush_fails_only_its_own_futures_and_recovers():
+    """Regression (satellite): a QP ERR during a planner-batched flush
+    fails ONLY the futures of WRs in the errored segment — routed by vq
+    ownership — while a healthy session sharing the same physical QP
+    completes its in-flight batch, and BOTH sessions are usable after the
+    module's background _recover."""
+    cluster = build_cluster(n_nodes=3)
+    env = cluster.env
+    m0 = cluster.module("n0")
+
+    def scenario():
+        sa = yield from connect(m0, "n1")     # peer will die
+        sb = yield from connect(m0, "n2")     # healthy peer, SAME pool QP
+        assert sa.qp is sb.qp                 # shared physical QP
+        mr2 = yield from cluster.module("n2").sys_qreg_mr(4096)
+        cluster.node("n2").buffer(mr2.addr)[:4] = 9
+        # warm B's MRStore so its flush validation needs no remote probes
+        yield from sb.read(mr2.rkey, 0, 4).wait()
+        cluster.fabric.node("n1").alive = False
+        with sa.batch():                      # errored segment
+            bad = [sa.send(np.zeros(16, np.uint8)) for _ in range(6)]
+        with sb.batch():                      # healthy segment
+            good = [sb.read(mr2.rkey, 0, 4) for _ in range(6)]
+        vals = yield from sb.wait_all(good)   # B unaffected
+        assert all((v == 9).all() for v in vals)
+        for f in bad:                         # A's futures all fail
+            with pytest.raises(SessionError):
+                yield from f.wait()
+        # vq ownership: only A's vq saw the error
+        assert not m0.vqs[sb.qd].errored
+        assert m0.vqs[sa.qd].uncomp_cnt == 0
+        # both sessions usable after _recover (peer restarts)
+        cluster.fabric.node("n1").alive = True
+        mr1 = yield from cluster.module("n1").sys_qreg_mr(4096)
+        cluster.node("n1").buffer(mr1.addr)[:4] = 5
+        v = yield from sa.read(mr1.rkey, 0, 4).wait()
+        assert (v == 5).all()
+        v = yield from sb.read(mr2.rkey, 0, 4).wait()
+        assert (v == 9).all()
+        return True
+
+    assert env.run_process(scenario(), "s")
+    env.run()                                 # recovery settles
+    assert all(qp.state == QPState.RTS for qp in m0.pools[0].dc_qps)
+
+
+def test_validation_reject_fails_batch_without_posting():
+    """A malformed op (bad remote range) must fail the whole flush's
+    futures via validation — atomically, nothing posted — and leave the
+    session healthy."""
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        sess = yield from connect(m0, "n1")
+        yield from sess.read(mr_srv.rkey, 0, 8).wait()      # warm
+        qp = sess.qp
+        posted = qp.stat_posted
+        with sess.batch():
+            futs = [sess.read(mr_srv.rkey, 0, 8),
+                    sess.read(mr_srv.rkey, 1 << 20, 8)]     # out of range
+        for f in futs:
+            with pytest.raises(SessionError):
+                yield from f.wait()
+        assert qp.stat_posted == posted                     # nothing posted
+        v = yield from sess.read(mr_srv.rkey, 0, 8).wait()  # still usable
+        assert len(v) == 8
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+# ============================================= two-sided: call / listen
+def test_call_reply_correlation_and_listener_window_recycling():
+    """call() futures resolve with the RIGHT reply regardless of server
+    completion order (call_id correlation), and a listener window smaller
+    than the burst recycles slots without losing messages."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    n = 12
+
+    def server():
+        lst = yield from listen(m1, 8801, msg_bytes=1024, window=3)
+        served = 0
+        backlog = []
+        while served < n:
+            msgs = yield from lst.recv()
+            backlog.extend(msgs)
+            # reply in REVERSE arrival order to exercise correlation
+            while backlog:
+                msg = backlog.pop()
+                yield from msg.reply(msg.payload * np.uint8(2))
+                served += 1
+        return True
+
+    def client():
+        sess = yield from connect(m0, "n1", port=8801)
+        futs = [sess.call(np.full(32, i + 1, np.uint8))
+                for i in range(n)]
+        replies = yield from sess.wait_all(futs)
+        for i, rep in enumerate(replies):
+            assert (rep.payload == 2 * (i + 1)).all(), i
+        return True
+
+    sp = env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered
+
+
+def test_recv_only_session_posts_its_window():
+    """Regression: a session that never issued a call() must still be
+    able to recv() — the waiter path posts the receive window itself."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def server():
+        lst = yield from listen(m1, 8803, msg_bytes=512, window=2)
+        msgs = yield from lst.recv()
+        # reply WITHOUT a call_id: lands as a plain recv message
+        yield from msgs[0].reply(b"pong")
+        return True
+
+    def client():
+        sess = yield from connect(m0, "n1", port=8803)
+        sess.recv_window(4, 512)
+        fut = sess.recv()                 # posted BEFORE any send/call
+        yield from sess.send(b"ping").wait()
+        msg = yield from fut.wait()
+        assert msg.payload.tobytes() == b"pong"
+        return True
+
+    sp = env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered
+
+
+def test_listener_recv_is_event_driven_no_busy_spin():
+    """A parked listener (no traffic) must not wedge the DES heap: env.run
+    returns even though the serve loop is still blocked on recv."""
+    cluster = build_cluster()
+    env = cluster.env
+    m1 = cluster.module("n1")
+    state = {"msgs": 0}
+
+    def server():
+        lst = yield from listen(m1, 8802, msg_bytes=512, window=2)
+        while True:
+            msgs = yield from lst.recv()
+            state["msgs"] += len(msgs)
+
+    env.process(server(), "srv")
+    t_end = env.run()                  # returns: recv blocks off-heap
+    assert state["msgs"] == 0
+    assert t_end < 1e6
+
+
+# ============================================================ BufferPool
+def test_buffer_pool_lease_release_coalesce_and_grow():
+    cluster = build_cluster()
+    m0 = cluster.module("n0")
+
+    def scenario():
+        pool = BufferPool(module=m0, grow_bytes=1024)
+        a = yield from pool.lease(100)       # rounds to 128
+        b = yield from pool.lease(100)
+        assert pool.bytes_total == 1024
+        assert (a.mr, b.mr) == (a.mr, b.mr) and a.off != b.off
+        a.release()
+        b.release()
+        assert pool.bytes_free == 1024       # coalesced back to one extent
+        big = yield from pool.lease(2048)    # forces growth
+        assert pool.bytes_total >= 1024 + 2048
+        big.release()
+        # context-manager lease
+        with (yield from pool.lease(64)) as lease:
+            lease.write(b"abc")
+            assert lease.read(3).tobytes() == b"abc"
+            assert not lease.released
+        assert lease.released
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_fixed_buffer_pool_exhaustion_raises():
+    cluster = build_cluster()
+    node = cluster.node("n0")
+    mr = node.reg_mr(node.alloc(256), 256)
+    pool = BufferPool(mr=mr, align=64)
+
+    def scenario():
+        leases = []
+        for _ in range(4):
+            leases.append((yield from pool.lease(64)))
+        with pytest.raises(SessionError):
+            yield from pool.lease(64)
+        leases[0].release()
+        again = yield from pool.lease(64)    # reuse after release
+        assert again.off == leases[0].off
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+# ====================================================== legacy shim
+def test_legacy_shim_warns_once_and_stays_functional():
+    import importlib
+    import repro.core.legacy as legacy
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        importlib.reload(legacy)             # fresh import -> one warning
+        importlib.import_module("repro.core.legacy")   # cached -> silent
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    # the shim still drives the raw surface (seed idiom keeps working)
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+        rc = yield from legacy.qpush(m0, qd, [WorkRequest(
+            op="READ", wr_id=1, local_mr=mr, local_off=0,
+            remote_rkey=mr_srv.rkey, remote_off=0, nbytes=8)])
+        assert rc == 0
+        ent = yield from legacy.qpop_block(m0, qd)
+        assert not ent.err
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+# ======================================= raw-QP sessions (meta clients)
+def test_meta_kvclient_rides_raw_session_same_budget():
+    """The boot-path KVClient now lowers through the same BatchPlan as
+    the syscall path: one doorbell + one CQE per get_many round."""
+    cluster = build_cluster()
+    m0 = cluster.module("n0")
+    client = m0._meta_clients[0]
+    kv = client.server
+    keys = [f"bk{i}".encode() for i in range(12)]
+    for k in keys:
+        kv.put(k, b"v-" + k)
+
+    def scenario():
+        d0 = client.qp.stat_doorbells
+        got = yield from client.get_many(keys)
+        assert got == [b"v-" + k for k in keys]
+        # 12 keys fit one round: exactly ONE doorbell for the whole batch
+        assert client.qp.stat_doorbells - d0 == 1
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")

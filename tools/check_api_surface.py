@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Deprecation-surface check (wired into ``make verify``).
+
+Two invariants of the session-layer API redesign:
+
+1. **No raw data-plane syscalls outside core/**: every in-repo client
+   (kvs, serverless, examples, benchmarks) must issue RDMA ops through
+   ``Session``/``Future`` (or, for the paper-figure microbenchmarks that
+   measure the raw surface itself, through the deprecated
+   ``repro.core.legacy`` shims). A direct ``.sys_qpush`` / ``.sys_qpop``
+   call site outside ``src/repro/core`` and ``tests/`` fails the check.
+   (Tests may keep exercising the qd-based surface directly — it is the
+   contract the session layer is built on.)
+
+2. **The legacy shim warns exactly once**: importing
+   ``repro.core.legacy`` twice must emit a single DeprecationWarning and
+   leave the module usable — old client code keeps working, loudly.
+
+Run: ``python tools/check_api_surface.py`` (repo root; exit 0 = pass).
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+import warnings
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+#: raw data-plane call sites: .sys_qpush / .sys_qpop (and their _recv /
+#: _msgs / batch variants via the same prefixes)
+PATTERN = re.compile(r"\.sys_qpush|\.sys_qpop")
+#: trees that must be session-only
+SCAN = ["src/repro", "examples", "benchmarks"]
+#: the transport layer itself (and its deprecated shims) are exempt
+EXEMPT = ("src/repro/core/",)
+
+
+def scan_raw_callsites() -> int:
+    bad = 0
+    for root in SCAN:
+        for dirpath, _dirs, files in os.walk(os.path.join(REPO, root)):
+            for fname in files:
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, REPO)
+                if rel.startswith(EXEMPT):
+                    continue
+                with open(path) as f:
+                    for lineno, line in enumerate(f, 1):
+                        if PATTERN.search(line):
+                            print(f"FAIL: raw sys_q* call outside core/: "
+                                  f"{rel}:{lineno}: {line.strip()}")
+                            bad += 1
+    return bad
+
+
+def check_legacy_warns_once() -> int:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        import repro.core.legacy                       # noqa: F401
+        importlib.import_module("repro.core.legacy")   # second import
+    dep = [w for w in caught
+           if issubclass(w.category, DeprecationWarning)
+           and "sys_q* client helpers are deprecated" in str(w.message)]
+    if len(dep) != 1:
+        print(f"FAIL: importing repro.core.legacy twice emitted "
+              f"{len(dep)} DeprecationWarnings (want exactly 1)")
+        return 1
+    # the shims must still be usable after warning
+    import repro.core.legacy as legacy
+    for name in ("qpush", "qpush_batch", "qpop", "qpop_batch",
+                 "qpop_block", "qpop_batch_block", "qpush_recv",
+                 "qpop_msgs"):
+        if not callable(getattr(legacy, name, None)):
+            print(f"FAIL: repro.core.legacy.{name} missing")
+            return 1
+    return 0
+
+
+def main() -> int:
+    bad = scan_raw_callsites()
+    bad += check_legacy_warns_once()
+    if bad:
+        print(f"api-surface check FAILED ({bad} violation(s))")
+        return 1
+    print("api-surface check OK: clients are session-only outside core/, "
+          "legacy shim warns once")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
