@@ -179,6 +179,114 @@ def bench_fabric_batching(n_wrs=256, signal_interval=16) -> Dict:
             "session_speedup": round(per_op / session, 2)}
 
 
+def bench_notify_single_op(n_ops=64) -> Dict:
+    """Notify-driven completion vs the polled baseline, single-op regime.
+
+    The batched paths amortize the poll charge across a doorbell batch;
+    a latency-sensitive single-op caller cannot. This bench pins the two
+    sides of the event-driven reactor redesign:
+
+    * **latency**: p50 of a single 64B READ through the session (reactor
+      blocks on the QP's completion-notify edge, wakes AT the CQE
+      instant) must be no worse than the deprecated polled idiom
+      (``qpop_block`` spinning 0.2us ticks);
+    * **idle syscalls**: a blocked single-op caller — one READ, and one
+      two-sided ``call`` parked on a listener round trip — must issue
+      ZERO unproductive pops (``Session.stat_idle_polls``).
+
+    Both are gated in ``run.py --smoke``.
+    """
+    from repro.core import WorkRequest, connect, legacy, listen, \
+        make_cluster
+
+    # ---- polled baseline: deprecated per-op qpush + qpop_block spin
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    out: Dict = {}
+
+    def polled():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        mr = yield from m0.sys_qreg_mr(4096)
+        qd = yield from m0.sys_queue()
+        yield from m0.sys_qconnect(qd, "n1")
+
+        def wr():
+            return [WorkRequest(op="READ", wr_id=1, local_mr=mr,
+                                local_off=0, remote_rkey=mr_srv.rkey,
+                                remote_off=0, nbytes=64)]
+
+        rc = yield from legacy.qpush(m0, qd, wr())       # warm MRStore
+        assert rc == 0
+        yield from legacy.qpop_block(m0, qd)
+        lats = []
+        for _ in range(n_ops):
+            t0 = env.now
+            rc = yield from legacy.qpush(m0, qd, wr())
+            assert rc == 0
+            yield from legacy.qpop_block(m0, qd)
+            lats.append(env.now - t0)
+        out["polled"] = lats
+        return True
+
+    env.run_process(polled(), "polled")
+
+    # ---- notify-driven session path (same shape, fresh cluster)
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def notify():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        sess = yield from connect(m0, "n1")
+        yield from sess.read(mr_srv.rkey, 0, 64).wait()  # warm
+        sess.stat_idle_polls = 0
+        lats = []
+        for _ in range(n_ops):
+            t0 = env.now
+            yield from sess.read(mr_srv.rkey, 0, 64).wait()
+            lats.append(env.now - t0)
+        out["notify"] = lats
+        out["read_idle_polls"] = sess.stat_idle_polls
+        out["notify_blocks"] = sess.stat_notify_blocks
+        return True
+
+    env.run_process(notify(), "notify")
+
+    # ---- blocked two-sided call: park on a listener round trip
+    cluster = make_cluster(n_nodes=2, n_meta=1)
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def echo_server():
+        lst = yield from listen(m1, 8901, msg_bytes=1024, window=4)
+        msgs = yield from lst.recv()
+        yield from msgs[0].reply(msgs[0].payload)
+        return True
+
+    def blocked_call():
+        sess = yield from connect(m0, "n1", port=8901)
+        fut = sess.call(b"ping", deadline_us=50_000.0)
+        yield from fut.wait()
+        out["call_idle_polls"] = sess.stat_idle_polls
+        return True
+
+    sp = env.process(echo_server(), "srv")
+    cp = env.process(blocked_call(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered
+
+    polled_p50 = float(np.percentile(out["polled"], 50))
+    notify_p50 = float(np.percentile(out["notify"], 50))
+    return {"n_ops": n_ops,
+            "polled_p50_us": round(polled_p50, 3),
+            "notify_p50_us": round(notify_p50, 3),
+            "speedup": round(polled_p50 / notify_p50, 3),
+            "read_idle_polls": int(out["read_idle_polls"]),
+            "call_idle_polls": int(out["call_idle_polls"]),
+            "notify_blocks": int(out["notify_blocks"])}
+
+
 def bench_kv_batching(n_keys=48) -> Dict:
     """RaceClient.lookup_many vs per-key lookup on the simulated fabric."""
     from repro.core import make_cluster
@@ -227,12 +335,14 @@ def run_suite(smoke: bool = False) -> Dict:
         # n_wrs=128: the session-overhead gate is defined at batch >= 128
         fabric = bench_fabric_batching(n_wrs=128, signal_interval=8)
         kv = bench_kv_batching(n_keys=8)
+        notify = bench_notify_single_op(n_ops=16)
     else:
         kernel = bench_kernel_sweep([8, 32, 128, 512], [64, 128, 256])
         fabric = bench_fabric_batching()
         kv = bench_kv_batching()
+        notify = bench_notify_single_op()
     return {"kernel_sweep": kernel, "fabric_qpush_batch": fabric,
-            "kv_lookup_many": kv}
+            "kv_lookup_many": kv, "notify_single_op": notify}
 
 
 def main() -> None:
@@ -263,6 +373,11 @@ def main() -> None:
           f"speedup={fb['speedup']}x")
     kv = results["kv_lookup_many"]
     print(f"kv lookup_many n={kv['n_keys']} speedup={kv['speedup']}x")
+    ns = results["notify_single_op"]
+    print(f"notify single-op p50 polled={ns['polled_p50_us']}us "
+          f"notify={ns['notify_p50_us']}us ({ns['speedup']}x), "
+          f"idle_polls read={ns['read_idle_polls']} "
+          f"call={ns['call_idle_polls']}")
     print(f"wrote {args.out}")
     # acceptance gate: tiled >= 5x at batch >= 128 (full run only)
     big = [r for r in results["kernel_sweep"] if r["batch"] >= 128]

@@ -38,6 +38,24 @@ def _smoke() -> None:
         print(f"smoke/{name},{r['batched_us']:.3f},"
               f"speedup={r['speedup']}x")
 
+    # idle-poll gate: a blocked single-op caller (one-sided READ, and a
+    # two-sided call parked on a listener round trip) must issue ZERO
+    # unproductive pops — the notify-driven reactor's whole point
+    ns = results["notify_single_op"]
+    if ns["read_idle_polls"] != 0 or ns["call_idle_polls"] != 0:
+        raise SystemExit(
+            f"idle-poll gate failed: blocked single-op caller issued "
+            f"read={ns['read_idle_polls']} call={ns['call_idle_polls']} "
+            f"idle pops (want 0): {ns}")
+    # latency gate: notify-driven single-op READ p50 no worse than the
+    # polled (qpop_block tick) baseline
+    if ns["notify_p50_us"] > ns["polled_p50_us"] * 1.0001:
+        raise SystemExit(
+            f"notify latency gate failed: p50 {ns['notify_p50_us']}us > "
+            f"polled baseline {ns['polled_p50_us']}us: {ns}")
+    print(f"smoke/notify_single_op,{ns['notify_p50_us']:.3f},"
+          f"polled={ns['polled_p50_us']}us_idle_polls=0")
+
     # session-vs-raw overhead gate: the typed Session/Future layer must
     # cost <= 5% added latency over hand-rolled qpush_batch at batch >= 128
     fb = results["fabric_qpush_batch"]

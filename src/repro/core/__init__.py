@@ -21,7 +21,7 @@ Layer map (see DESIGN.md):
 """
 
 from .costmodel import CostModel, DEFAULT, validate
-from .sim import Environment, Resource, Store
+from .sim import Broadcast, Environment, Resource, Store
 from .fabric import Fabric, MemoryRegion, MRError, Node
 from .qp import (QP, Completion, QPError, QPState, QPType, RecvBuffer,
                  WorkRequest, connect_rc_pair)
@@ -32,21 +32,21 @@ from .virtqueue import (CompEntry, PolledMsg, VirtQueue, decode_wr_id,
                         encode_wr_id)
 from .module import KRCoreError, KRCoreModule, install
 from .plan import BatchPlan, plan_batch
-from .session import (BufferPool, Future, Lease, Listener, Message,
-                      Session, SessionError, connect, from_qd, listen,
-                      raw_session)
+from .session import (BufferPool, CallTimeout, Cancelled, Future, Lease,
+                      Listener, Message, Session, SessionError, connect,
+                      from_qd, listen, raw_session)
 from .baselines import LiteKernel, VerbsProcess
 from .cluster import Cluster, make_cluster
 
 __all__ = [
-    "CostModel", "DEFAULT", "validate", "Environment", "Resource", "Store",
-    "Fabric", "MemoryRegion", "MRError", "Node", "QP", "Completion",
-    "QPError", "QPState", "QPType", "RecvBuffer", "WorkRequest",
-    "connect_rc_pair", "DCCache", "DCTMeta", "DrTMKV", "KVClient",
-    "MetaServer", "MRStore", "ValidMRStore", "HybridQPPool", "CompEntry",
-    "PolledMsg", "VirtQueue", "decode_wr_id", "encode_wr_id", "KRCoreError",
-    "KRCoreModule", "install", "BatchPlan", "plan_batch", "BufferPool",
-    "Future", "Lease", "Listener", "Message", "Session", "SessionError",
-    "connect", "from_qd", "listen", "raw_session", "LiteKernel",
-    "VerbsProcess", "Cluster", "make_cluster",
+    "CostModel", "DEFAULT", "validate", "Broadcast", "Environment",
+    "Resource", "Store", "Fabric", "MemoryRegion", "MRError", "Node", "QP",
+    "Completion", "QPError", "QPState", "QPType", "RecvBuffer",
+    "WorkRequest", "connect_rc_pair", "DCCache", "DCTMeta", "DrTMKV",
+    "KVClient", "MetaServer", "MRStore", "ValidMRStore", "HybridQPPool",
+    "CompEntry", "PolledMsg", "VirtQueue", "decode_wr_id", "encode_wr_id",
+    "KRCoreError", "KRCoreModule", "install", "BatchPlan", "plan_batch",
+    "BufferPool", "CallTimeout", "Cancelled", "Future", "Lease", "Listener",
+    "Message", "Session", "SessionError", "connect", "from_qd", "listen",
+    "raw_session", "LiteKernel", "VerbsProcess", "Cluster", "make_cluster",
 ]

@@ -151,21 +151,24 @@ class Fabric:
                   remote_mr: MemoryRegion, remote_off: int,
                   nbytes: int, dct: bool = False,
                   dct_connect: bool = False, compare: int = 0,
-                  swap: int = 0) -> Generator:
-        """One-sided READ/WRITE/CAS from ``src`` targeting ``dst`` memory.
+                  swap: int = 0, add: int = 0) -> Generator:
+        """One-sided READ/WRITE/CAS/FAA from ``src`` targeting ``dst``
+        memory.
 
         Bypasses the destination CPU entirely (only NIC engine time there).
         Raises MRError on invalid access — the caller (QP) moves to an error
-        state, mirroring hardware behaviour. CAS is an 8-byte atomic: the
-        read-compare-swap happens at a single simulation instant at the
-        destination NIC (no yield between read and write), and the
-        previous value returns to (local_mr, local_off).
+        state, mirroring hardware behaviour. CAS and FAA are 8-byte
+        atomics: the read-modify-write happens at a single simulation
+        instant at the destination NIC (no yield between read and write),
+        and the previous value returns to (local_mr, local_off). FAA adds
+        ``add`` to the remote u64 (mod 2^64) — the wait-free sibling of
+        CAS for counters/tickets (no retry loop under contention).
         """
         cm = self.cm
         extra = cm.dct_op_extra_us if dct else 0.0
         if dct_connect:
             extra += cm.dct_connect_us
-        if op == "CAS":
+        if op in ("CAS", "FAA"):
             nbytes = 8
         if not dst.alive:
             # retry timeout at the initiator NIC, then transport error
@@ -177,10 +180,10 @@ class Fabric:
         yield from self._engine(src, cm.nic_op_us + extra)
         # request flight (header-only for READ, header+payload for WRITE,
         # compare+swap operands for CAS)
-        req_payload = nbytes if op in ("WRITE", "CAS") else 0
+        req_payload = nbytes if op in ("WRITE", "CAS", "FAA") else 0
         yield self.env.timeout(cm.wire_us + cm.payload_us(req_payload))
         # destination NIC DMA (CPU bypass)
-        resp_payload = nbytes if op in ("READ", "CAS") else 0
+        resp_payload = nbytes if op in ("READ", "CAS", "FAA") else 0
         yield from self._engine(dst, cm.nic_op_us
                                 + cm.payload_us(max(req_payload, resp_payload)))
         if op == "READ":
@@ -195,6 +198,13 @@ class Fabric:
                 new = np.array([swap & 0xFFFFFFFFFFFFFFFF],
                                np.uint64).view(np.uint8)
                 dst.write_bytes(remote_mr.addr, remote_off, new)
+            src.write_bytes(local_mr.addr, local_off, old)
+        elif op == "FAA":
+            old = dst.read_bytes(remote_mr.addr, remote_off, 8)
+            summed = (int(old.view(np.uint64)[0]) + add) \
+                & 0xFFFFFFFFFFFFFFFF
+            dst.write_bytes(remote_mr.addr, remote_off,
+                            np.array([summed], np.uint64).view(np.uint8))
             src.write_bytes(local_mr.addr, local_off, old)
         else:
             raise FabricError(f"bad one-sided op {op}")

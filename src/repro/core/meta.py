@@ -130,8 +130,10 @@ class KVClient:
                 f"scratch_mr too small for lookups: need "
                 f"batch_scratch_off ({batch_scratch_off}) + SLOT ({SLOT}) "
                 f"bytes, have {scratch_mr.length}")
+        # completion delivery is notify-driven (the session reactor blocks
+        # on the QP's CQE edge), so no poll-cadence tuning is needed: a
+        # lookup wakes at the instant its CQE is generated
         self.session = raw_session(qp, dst=server.node.name, pool=pool)
-        self.session.poll_us = 0.05           # meta lookups poll tightly
 
     def lookup(self, key: bytes, max_probes: int = 8) -> Generator:
         """yields sim events; returns value bytes or None."""

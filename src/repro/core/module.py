@@ -25,8 +25,8 @@ from .fabric import Fabric, MemoryRegion, MRError, Node
 from .meta import (SLOT, DCCache, DCTMeta, DrTMKV, KVClient, MetaServer,
                    MRStore, ValidMRStore, fnv1a)
 from .pool import HybridQPPool
-from .qp import (QP, Completion, QPError, QPState, QPType, RecvBuffer,
-                 WorkRequest, connect_rc_pair)
+from .qp import (ATOMIC_OPS, QP, Completion, QPError, QPState, QPType,
+                 RecvBuffer, VALID_OPS, WorkRequest, connect_rc_pair)
 from .sim import Store
 from .virtqueue import (NOT_READY, READY, CompEntry, PolledMsg, RecvEntry,
                         VirtQueue, decode_wr_id, encode_wr_id)
@@ -357,7 +357,7 @@ class KRCoreModule:
                 self._check_request(vq, req)
             except KRCoreError:
                 return -1                                   # Alg.2 line 8
-            if req.op in ("READ", "WRITE", "CAS"):
+            if req.op in ("READ", "WRITE") + ATOMIC_OPS:
                 ok = yield from self._check_remote_mr(vq, req)
                 if not ok:
                     return -1                               # Alg.2 line 8
@@ -444,6 +444,40 @@ class KRCoreModule:
         self._qpop_inner(vq)
         return vq.pop_ready_batch(max_n)
 
+    def qpop_wait(self, qd: int, max_n: int = 64) -> Generator:
+        """Blocking batched qpop — completion-channel semantics.
+
+        ONE kernel crossing that parks on the physical QP's CQE edge when
+        nothing is consumable (``ibv_get_cq_event`` and the follow-up CQ
+        poll fused into a single syscall). The crossing charge is paid at
+        ENTRY, so for a blocked caller it overlaps the in-flight op's
+        wire time instead of trailing the CQE the way a poll tick does —
+        the session reactor rides this for one-sided waits, which is how
+        a blocked single-op caller gets CQE-instant wakeup with zero
+        idle-poll syscalls.
+
+        Readiness includes the message queue: if messages are already
+        consumable the call returns (possibly empty) instead of sleeping
+        past them. Returns immediately with whatever is ready when the
+        QP is in ERR — recovery pacing is the caller's job.
+        """
+        vq = self._vq(qd)
+        yield self.env.timeout(self.cm.syscall_us)
+        while True:
+            self._qpop_inner(vq)
+            out = vq.pop_ready_batch(max_n)
+            if out or vq.msg_queue:
+                return out
+            qps = [q for q in (vq.qp, vq.old_qp) if q is not None]
+            if not qps or any(q.state == QPState.ERR for q in qps):
+                return out               # ERR escape: caller paces recovery
+            ev = self.env.event()
+            for q in qps:
+                q.comp_notify.subscribe(ev)
+            if any(q.cq for q in qps):
+                continue                 # CQE raced the arm: re-poll now
+            yield ev
+
     def qpop_block(self, qd: int, poll_us: float = 0.2) -> Generator:
         """Convenience: spin qpop until a completion arrives."""
         while True:
@@ -506,11 +540,11 @@ class KRCoreModule:
 
     def _check_request(self, vq: VirtQueue, req: WorkRequest) -> None:
         """Malformed-request detection (§4.4 factor 1)."""
-        if req.op not in ("READ", "WRITE", "SEND", "CAS"):
+        if req.op not in VALID_OPS:
             raise KRCoreError(f"invalid opcode {req.op!r}")
-        if req.op == "CAS" and req.nbytes != 8:
-            raise KRCoreError("CAS is an 8-byte atomic")
-        if req.op in ("READ", "WRITE", "CAS"):
+        if req.op in ATOMIC_OPS and req.nbytes != 8:
+            raise KRCoreError(f"{req.op} is an 8-byte atomic")
+        if req.op in ("READ", "WRITE") + ATOMIC_OPS:
             if req.local_mr is None:
                 raise KRCoreError("missing local MR")
             try:

@@ -18,6 +18,14 @@ budget as a hand-rolled ``qpush_batch`` call — and the property tests in
 The raw-QP transport (kernel-internal sessions, e.g. the meta-server
 clients) uses the same plan to drive ``QP.post_send`` directly, so both
 the syscall path and the in-kernel path share one signaling discipline.
+
+Plans are op-agnostic: READ/WRITE/SEND and the 8-byte atomics (CAS and
+its fetch-and-add sibling FAA) all cost one WR slot, so a mixed batch —
+e.g. a RACE client's bucket READs plus a version-bump FAA — lowers
+through one plan with the same doorbell/CQE budget. Cancellation
+(:meth:`repro.core.session.Future.cancel`) happens strictly BEFORE
+planning: a cancelled op is removed from the pending list, and the plan
+is computed over what actually posts — a plan never contains holes.
 """
 
 from __future__ import annotations

@@ -29,7 +29,7 @@ from typing import Deque, Dict, Generator, List, Optional, Tuple
 import numpy as np
 
 from .fabric import Fabric, MemoryRegion, MRError, Node
-from .sim import Store
+from .sim import Broadcast, Store
 
 
 class QPType(enum.Enum):
@@ -46,7 +46,9 @@ class QPState(enum.Enum):
     ERR = 4
 
 
-VALID_OPS = ("READ", "WRITE", "SEND", "CAS")
+VALID_OPS = ("READ", "WRITE", "SEND", "CAS", "FAA")
+#: the 8-byte one-sided atomics (single-slot compare/exchange + add)
+ATOMIC_OPS = ("CAS", "FAA")
 
 
 @dataclasses.dataclass
@@ -60,10 +62,12 @@ class WorkRequest:
     remote_rkey: int = 0
     remote_off: int = 0
     nbytes: int = 0
-    # atomic fields (op == "CAS": 8-byte compare-and-swap; the previous
-    # remote value lands at (local_mr, local_off))
+    # atomic fields (op == "CAS": 8-byte compare-and-swap; op == "FAA":
+    # 8-byte fetch-and-add of ``add``; either way the previous remote
+    # value lands at (local_mr, local_off))
     compare: int = 0
     swap: int = 0
+    add: int = 0
     # two-sided fields
     payload: Optional[np.ndarray] = None
     header: Optional[dict] = None
@@ -145,6 +149,11 @@ class QP:
         self._send_fifo_tail = None
         #: tokens pushed whenever a recv CQE is generated (event-driven pumps)
         self.recv_notify = Store(self.env)
+        #: poked whenever a send-side CQE is generated into ``cq`` (or the
+        #: QP flips to ERR) — the completion-channel analogue the session
+        #: reactors block on instead of poll ticks. Broadcast (not Store):
+        #: every session sharing this physical CQ must observe the edge.
+        self.comp_notify = Broadcast(self.env)
         node.mailboxes[self.qpn] = self.mailbox
         self._rx_proc = self.env.process(self._rx_loop(), f"qp{self.qpn}.rx")
         # stats
@@ -197,6 +206,9 @@ class QP:
 
     def _to_error(self, reason: str) -> None:
         self.state = QPState.ERR
+        # wake blocked reactors: an ERR transition without a CQE (SQ/CQ
+        # overrun) would otherwise leave notify-driven waiters parked
+        self.comp_notify.poke()
 
     # ------------------------------------------------------------- verbs
     def post_recv(self, buf: RecvBuffer) -> None:
@@ -271,7 +283,7 @@ class QP:
         try:
             dst, dst_qpn, reconnect = self._route(wr)
             dct = self.qptype == QPType.DC
-            if wr.op in ("READ", "WRITE", "CAS"):
+            if wr.op in ("READ", "WRITE", "CAS", "FAA"):
                 remote_mr = dst.lookup_mr(wr.remote_rkey)
                 if remote_mr is None:
                     raise MRError(f"rkey {wr.remote_rkey} unknown at {dst.name}")
@@ -279,7 +291,7 @@ class QP:
                     wr.op, self.node, dst, wr.local_mr, wr.local_off,
                     remote_mr, wr.remote_off, wr.nbytes,
                     dct=dct, dct_connect=reconnect,
-                    compare=wr.compare, swap=wr.swap)
+                    compare=wr.compare, swap=wr.swap, add=wr.add)
             elif wr.op == "SEND":
                 header = dict(wr.header or {})
                 header.setdefault("src", self.node.name)
@@ -311,6 +323,7 @@ class QP:
 
     def _flush_in_order(self) -> None:
         """Generate CQEs strictly in posting order (RC FIFO semantics)."""
+        generated = False
         while self._next_complete in self._done_buffer:
             wr, status, nbytes = self._done_buffer.pop(self._next_complete)
             self._next_complete += 1
@@ -327,8 +340,13 @@ class QP:
                 self.cq.append(Completion(wr.wr_id, status, wr.op, nbytes,
                                           covers=self._uncovered))
                 self._uncovered = 0
+                generated = True
             # NOTE: sq entries are NOT reclaimed at CQE generation — they
             # are reclaimed when the covering CQE is *polled* (poll_cq).
+        if generated:
+            # one edge per flush burst: a completion cascade wakes every
+            # blocked reactor once, and they bulk-drain what landed
+            self.comp_notify.poke()
 
     def reclaim(self, n: int) -> None:
         """Free ``n`` send-queue entries (a covering CQE was polled)."""

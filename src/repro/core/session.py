@@ -24,6 +24,19 @@ scratch-MR management, reply routing and error recovery against
 * :func:`listen` + :class:`Listener` are the server side: a bound
   VirtQueue with a leased receive window, delivering :class:`Message`
   objects with ``accept``-semantics reply sessions.
+* Completions are **event-driven**: a per-session reactor process blocks
+  on completion-notify events (the per-QP :class:`~repro.core.sim.
+  Broadcast` poked at CQE generation, plus the vq's message notify) and
+  only pops when a notify edge or a user-visible queue peek says a pop
+  will be productive — a blocked single-op caller issues ZERO idle-poll
+  syscalls (``Session.stat_idle_polls`` proves it; gated in
+  ``benchmarks/run.py --smoke``).
+* ``call`` has real RPC semantics: ``deadline_us=`` fails that call's
+  Future with a typed :class:`CallTimeout` (the session stays usable and
+  a late reply is dropped by call-id epoch, so a stale reply can never
+  resolve a reincarnated call), ``retries=`` opt-in idempotent re-post
+  through the planner, and :meth:`Future.cancel` retires planner-pending
+  ops / awaiting calls.
 
 Two transports share the machinery: the syscall transport (a VirtQueue
 ``qd`` on a booted module — what applications use) and a raw-QP
@@ -40,20 +53,24 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import logging
 from collections import deque
 from typing import (Any, Deque, Dict, Generator, List, Optional, Sequence,
-                    Tuple)
+                    Set, Tuple)
 
 import numpy as np
 
 from .fabric import MemoryRegion, MRError
 from .plan import BatchPlan, plan_batch
 from .qp import QP, QPError, QPState, WorkRequest
-from .sim import Store
+from .sim import Broadcast, Store
 from .virtqueue import READY, CompEntry, PolledMsg
 
-__all__ = ["Session", "SessionError", "Future", "BufferPool", "Lease",
-           "Listener", "Message", "connect", "listen"]
+__all__ = ["Session", "SessionError", "CallTimeout", "Cancelled", "Future",
+           "BufferPool", "Lease", "Listener", "Message", "connect",
+           "listen"]
+
+_LOG = logging.getLogger(__name__)
 
 _ERROR_TYPES: Optional[tuple] = None
 
@@ -72,6 +89,19 @@ class SessionError(Exception):
     """A session op failed (validation reject, QP error, pool exhausted)."""
 
 
+class CallTimeout(SessionError):
+    """``session.call(..., deadline_us=)`` missed its deadline.
+
+    Scope: ONLY the timed-out call's Future fails; the session stays
+    usable, its recv window stays posted, and the call-id epoch is
+    retired so a late reply is dropped instead of resolving anything.
+    """
+
+
+class Cancelled(SessionError):
+    """:meth:`Future.cancel` won the race against completion."""
+
+
 def _as_u8(data) -> np.ndarray:
     """Coerce payload-like input (bytes / bytearray / array) to uint8."""
     if isinstance(data, (bytes, bytearray, memoryview)):
@@ -87,17 +117,30 @@ class Future:
 
     Resolved by the session's completion reactor when the covering
     CompEntry (or, for ``call``, the reply message) arrives. ``wait()``
-    drives the reactor — flushing the op if it is still pending — and
-    returns the op's value, raising :class:`SessionError` on failure.
+    flushes the op if it is still planner-pending, then parks on the
+    future's own wake event until the reactor (or a deadline watchdog,
+    or ``cancel``) transitions it; it returns the op's value, raising
+    the recorded error class (:class:`SessionError` / :class:`CallTimeout`
+    / :class:`Cancelled`) on failure.
+
+    Transitions are **first-writer-wins**: once resolved or failed, a
+    late second transition (e.g. an ERR CQE for an op whose deadline
+    already fired, or a reply racing a cancel) is dropped, counted on
+    ``session.stat_double_transitions``, and logged — it can never
+    overwrite the recorded outcome.
     """
 
-    __slots__ = ("_session", "_done", "_value", "_error")
+    __slots__ = ("_session", "_done", "_value", "_error", "_error_kind",
+                 "_waiters", "_op")
 
     def __init__(self, session: "Session"):
         self._session = session
         self._done = False
         self._value: Any = None
         self._error: Optional[str] = None
+        self._error_kind = SessionError
+        self._waiters: List = []
+        self._op: Optional["_Op"] = None       # backref for cancel()
 
     @property
     def done(self) -> bool:
@@ -111,19 +154,71 @@ class Future:
     def error(self) -> Optional[str]:
         return self._error
 
-    def _resolve(self, value: Any) -> None:
-        if not self._done:
-            self._done, self._value = True, value
+    @property
+    def cancelled(self) -> bool:
+        return self._done and self._error_kind is Cancelled
 
-    def _fail(self, reason: str) -> None:
-        if not self._done:
-            self._done, self._error = True, reason
+    def _wake(self) -> None:
+        waiters, self._waiters = self._waiters, []
+        for ev in waiters:
+            if not ev.triggered:
+                ev.succeed()
+
+    def _subscribe(self):
+        """An event that fires when this future transitions (already
+        triggered if it is done)."""
+        ev = self._session.env.event()
+        if self._done:
+            ev.succeed()
+        else:
+            self._waiters.append(ev)
+        return ev
+
+    def _log_double(self, what: str) -> None:
+        sess = self._session
+        if sess is not None:
+            sess.stat_double_transitions += 1
+        prior = "resolved" if self._error is None \
+            else f"failed ({self._error_kind.__name__}: {self._error})"
+        _LOG.warning("Future double-transition: late %s dropped, already "
+                     "%s (first-writer-wins)", what, prior)
+
+    def _resolve(self, value: Any) -> bool:
+        if self._done:
+            self._log_double("resolve")
+            return False
+        self._done, self._value = True, value
+        self._wake()
+        return True
+
+    def _fail(self, reason: str, kind=None) -> bool:
+        if self._done:
+            self._log_double(f"fail ({reason})")
+            return False
+        self._done, self._error = True, reason
+        self._error_kind = kind or SessionError
+        self._wake()
+        return True
+
+    def cancel(self) -> bool:
+        """Cancel the op if it has not taken effect yet. Returns True
+        when this future transitions to :class:`Cancelled`:
+
+        * a planner-pending op (posted this tick / inside ``batch()``,
+          not yet flushed) is removed before anything reaches the wire;
+        * an awaited ``call`` is deregistered — its call-id epoch is
+          retired, so a reply arriving later is dropped as stale.
+
+        A one-sided op already in flight (or a done future) cannot be
+        cancelled: returns False and the future resolves normally.
+        """
+        return self._session._cancel(self)
 
     def wait(self) -> Generator:
         """yield sim events until resolved; returns the op's value."""
         yield from self._session._await(self)
         if self._error is not None:
-            raise SessionError(self._error)
+            raise self._error_kind(self._error)
         return self._value
 
 
@@ -299,6 +394,25 @@ class _VqTransport:
         vq = self.vq
         return vq.stat_entries_queued if vq is not None else 0
 
+    def has_entries(self) -> bool:
+        """Free (no-syscall) peek: would an entry pop be productive?
+        The vq comp queue and the hardware CQ buffer are both mapped
+        user-readable (LITE shared queues / verbs CQ buffers), so this is
+        a load, not a crossing."""
+        vq = self.vq
+        if vq is None:
+            return False
+        if vq.ready_head():
+            return True
+        qp = vq.qp
+        if qp is not None and qp.cq:
+            return True
+        return vq.old_qp is not None and bool(vq.old_qp.cq)
+
+    def has_msgs(self) -> bool:
+        vq = self.vq
+        return vq is not None and bool(vq.msg_queue)
+
     def push(self, wrs: List[WorkRequest],
              signal_interval: Optional[int]) -> Generator:
         n = yield from self.module.qpush_batch(
@@ -310,6 +424,11 @@ class _VqTransport:
 
     def pop(self, max_n: int = 64) -> Generator:
         return (yield from self.module.qpop_batch(self.qd, max_n=max_n))
+
+    def pop_wait(self, max_n: int = 64) -> Generator:
+        """Blocking pop: parks in-kernel on the CQE edge (one crossing,
+        paid at entry — see :meth:`KRCoreModule.qpop_wait`)."""
+        return (yield from self.module.qpop_wait(self.qd, max_n=max_n))
 
     def push_recv(self, mr: MemoryRegion, off: int, length: int,
                   wr_id: int) -> Generator:
@@ -356,6 +475,12 @@ class _RawQPTransport:
     def entries_queued(self) -> int:
         return self._entries_posted
 
+    def has_entries(self) -> bool:
+        return bool(self._cqes) or bool(self.qp.cq)
+
+    def has_msgs(self) -> bool:
+        return False
+
     def _drain_cq(self) -> bool:
         got = self.qp.poll_cq(max_n=64)
         for c in got:
@@ -395,6 +520,22 @@ class _RawQPTransport:
         return out
         yield                                  # generator marker (unreached)
 
+    def pop_wait(self, max_n: int = 64) -> Generator:
+        """Blocking pop over the bare QP: kernel-internal, so no syscall
+        charge — just park on the CQE edge and drain."""
+        while True:
+            self._drain_cq()
+            out: List[CompEntry] = []
+            while self._cqes and len(out) < max_n:
+                out.append(self._cqes.popleft())
+            if out or self.qp.state == QPState.ERR:
+                return out
+            ev = self.env.event()
+            self.qp.comp_notify.subscribe(ev)
+            if self.qp.cq:
+                continue                       # CQE raced the arm
+            yield ev
+
     def push_recv(self, *a, **kw) -> Generator:
         raise SessionError("raw-QP session has no two-sided path")
         yield                                  # generator marker (unreached)
@@ -409,7 +550,7 @@ class _RawQPTransport:
 # ======================================================================
 @dataclasses.dataclass
 class _Op:
-    kind: str                                  # read | write | cas | send
+    kind: str                           # read | write | cas | faa | send
     future: Future
     nbytes: int = 0
     remote_rkey: int = 0
@@ -419,10 +560,18 @@ class _Op:
     src: Optional[Tuple[MemoryRegion, int, int]] = None
     compare: int = 0
     swap: int = 0
+    add: int = 0
     meta: Optional[dict] = None
     call_id: Optional[int] = None
     lease: Optional[Lease] = None
     hold_lease: bool = False
+    deadline_us: Optional[float] = None
+    retries: int = 0
+    #: True for the implicit lost-reply stall guard on deadline-less
+    #: calls: fails with plain SessionError (not CallTimeout) at the
+    #: legacy spin_limit * poll_us bound, so a swallowed reply stays a
+    #: LOUD failure instead of a silent forever-park
+    stall_guard: bool = False
 
 
 @dataclasses.dataclass
@@ -461,11 +610,32 @@ class _RecvWindow:
         self.window = window
         self.slots: Dict[int, Lease] = {}
         self._next_id = itertools.count(1)
+        #: slots posted at a pre-resize (smaller) size, awaiting lazy
+        #: retirement: a posted recv is hardware-owned and cannot be
+        #: recalled, so each drains in place and is REPLACED (released +
+        #: re-leased at the new size) instead of re-posted — resize
+        #: defers to the recv drain rather than stranding posted slots
+        self._retire: Set[int] = set()
+        self.stat_retired = 0
 
     def resize(self, window: int, msg_bytes: int) -> None:
-        """Widen targets (never shrinks; new slots use the new size)."""
+        """Widen targets (never shrinks; new slots use the new size).
+
+        Growing ``msg_bytes`` while recvs are in flight cannot touch the
+        already-posted smaller slots — the NIC owns them. They are marked
+        for retirement instead: when such a slot's recv completes it is
+        released (not recycled) and ``ensure`` immediately posts a
+        replacement at the new size, so the window converges to the new
+        geometry without ever abandoning a posted slot.
+        """
         self.window = max(self.window, window)
-        self.msg_bytes = max(self.msg_bytes, msg_bytes)
+        new_mb = max(self.msg_bytes, msg_bytes)
+        if new_mb != self.msg_bytes:
+            self.msg_bytes = new_mb
+            want = self.pool._align(new_mb)
+            for wr_id, lease in self.slots.items():
+                if lease.nbytes < want:
+                    self._retire.add(wr_id)
 
     def ensure(self, push_recv) -> Generator:
         """Post leases until ``window`` slots stand; ``push_recv(mr, off,
@@ -484,13 +654,38 @@ class _RecvWindow:
 
     def recycle(self, wr_id: int, push_recv) -> Generator:
         lease = self.slots.get(wr_id)
-        if lease is not None:
-            yield from push_recv(lease.mr, lease.off, lease.nbytes, wr_id)
+        if lease is None:
+            return
+        if wr_id in self._retire:
+            # deferred resize: the drained slot retires here; its
+            # replacement (new size) posts via ensure
+            self._retire.discard(wr_id)
+            del self.slots[wr_id]
+            lease.release()
+            self.stat_retired += 1
+            yield from self.ensure(push_recv)
+            return
+        yield from push_recv(lease.mr, lease.off, lease.nbytes, wr_id)
 
     def close(self) -> None:
         for lease in self.slots.values():
             lease.release()
         self.slots.clear()
+        self._retire.clear()
+
+
+class _NotifyFwd:
+    """Store-compatible shim installed as ``vq.msg_notify``: the module
+    calls ``.put(n)`` when messages land on the queue; a session forwards
+    that edge into its own :class:`Broadcast` hub so the reactor wakes."""
+
+    __slots__ = ("hub",)
+
+    def __init__(self, hub: Broadcast):
+        self.hub = hub
+
+    def put(self, n: int) -> None:
+        self.hub.poke()
 
 
 class _BatchScope:
@@ -532,7 +727,11 @@ class Session:
         self.pool = pool
         self.env = transport.env
         self.signal_interval = signal_interval
+        #: DEPRECATED: the reactor is notify-driven and never poll-ticks;
+        #: kept for source compatibility with pre-notify callers
         self.poll_us = poll_us
+        #: bound on the ERR-state recovery wait (NOT an idle-poll budget:
+        #: the hot path never spins)
         self.spin_limit = spin_limit
         self._pending: List[_Op] = []
         self._groups: Deque[List[_Op]] = deque()
@@ -547,10 +746,30 @@ class Session:
         self._msg_backlog: Deque[Message] = deque()
         self._window: Optional[_RecvWindow] = None
         self.closed = False
+        # completion-notify reactor state
+        self._notify = Broadcast(self.env)    # message / local wake edges
+        self._seen_pokes: Dict[Broadcast, int] = {}
+        self._reactor_running = False
+        self._err_spins = 0
+        vq = self._t.vq
+        if vq is not None and self._t.two_sided:
+            vq.msg_notify = _NotifyFwd(self._notify)
+        for hub in self._hubs():              # prime "seen" so pre-session
+            self._seen_pokes[hub] = hub.stat_pokes   # history isn't "new"
         # stats
         self.stat_ops = 0
         self.stat_flushes = 0
         self.stat_batched_ops = 0
+        #: reactor wake-ups that popped NOTHING (the idle-poll syscall
+        #: charge the notify-driven design exists to eliminate; gated == 0
+        #: for a single blocked call in benchmarks/run.py --smoke)
+        self.stat_idle_polls = 0
+        self.stat_notify_blocks = 0           # event-driven parks
+        self.stat_stale_replies = 0           # epoch-dropped late replies
+        self.stat_double_transitions = 0      # first-writer-wins drops
+        self.stat_timeouts = 0                # CallTimeout-failed calls
+        self.stat_retries = 0                 # idempotent call re-posts
+        self.stat_cancelled = 0               # Future.cancel wins
 
     # ------------------------------------------------------- introspection
     @property
@@ -602,6 +821,16 @@ class Session:
                               remote_off=remote_off,
                               compare=int(compare), swap=int(swap)))
 
+    def faa(self, remote_rkey: int, remote_off: int, add: int) -> Future:
+        """One-sided 8-byte fetch-and-add — CAS's wait-free sibling.
+        Future value: the previous remote u64; the remote word becomes
+        ``old + add`` (mod 2^64) atomically at the destination NIC, so a
+        shared counter/ticket needs ONE op where a CAS loop needs a READ
+        plus at least one (contended: many) CAS round trips."""
+        return self._post(_Op("faa", Future(self), nbytes=8,
+                              remote_rkey=remote_rkey,
+                              remote_off=remote_off, add=int(add)))
+
     def send(self, data, meta: Optional[dict] = None) -> Future:
         """Two-sided SEND. Future value: the send CompEntry. Payloads
         above the kernel message size take the §4.5 zero-copy path; their
@@ -610,26 +839,58 @@ class Session:
         return self._post(_Op("send", Future(self), nbytes=len(arr),
                               data=arr, meta=meta))
 
-    def call(self, data, meta: Optional[dict] = None) -> Future:
+    def call(self, data, meta: Optional[dict] = None,
+             deadline_us: Optional[float] = None,
+             retries: int = 0) -> Future:
         """send + awaited reply. Future value: the reply
         :class:`Message` (``.payload`` bytes + ``.hdr`` metadata).
-        Correlated via header ``call_id`` (FIFO-independent)."""
+        Correlated via header ``call_id`` (FIFO-independent).
+
+        ``deadline_us``: fail THIS call's Future with :class:`CallTimeout`
+        once the deadline elapses without a reply. The session stays
+        usable, scratch/window accounting is untouched, and the call-id
+        epoch is retired — a reply arriving after the deadline is dropped
+        (``stat_stale_replies``) instead of resolving a reincarnated call
+        or leaking into ``recv()``.
+
+        ``retries``: opt-in for **idempotent** requests — each elapsed
+        deadline re-posts the request through the planner under a fresh
+        call-id (same Future) up to ``retries`` times before the final
+        :class:`CallTimeout`. Requires ``deadline_us``.
+        """
+        if retries and deadline_us is None:
+            raise SessionError("call(retries=...) requires a deadline_us")
+        if deadline_us is not None and deadline_us <= 0:
+            raise SessionError(f"bad deadline_us {deadline_us}")
         cid = next(Session._call_ids)
         fut = Future(self)
         arr = _as_u8(data)
-        op = _Op("send", fut, nbytes=len(arr), data=arr, meta=meta,
-                 call_id=cid)
+        # no explicit deadline: keep the lost-reply failure LOUD at the
+        # legacy stall bound (spin_limit polls of poll_us each) — an
+        # event-driven watchdog now, not 200k wasted syscalls
+        stall_guard = deadline_us is None
+        guard_us = deadline_us if deadline_us is not None \
+            else self.spin_limit * self.poll_us
+        op = _Op("send", fut, nbytes=len(arr), data=arr,
+                 meta=None if meta is None else dict(meta), call_id=cid,
+                 deadline_us=guard_us, retries=int(retries),
+                 stall_guard=stall_guard)
         self._calls[cid] = fut
+        self.env.process(self._deadline_watch(op, cid),
+                         f"sess{self.id}.deadline{cid}")
         return self._post(op)
 
     def recv(self) -> Future:
         """Receive one message on this session's queue. Future value: a
         :class:`Message`."""
         fut = Future(self)
-        if self._msg_backlog:
+        if self.closed:
+            fut._fail("session closed")
+        elif self._msg_backlog:
             fut._resolve(self._msg_backlog.popleft())
         else:
             self._recv_waiters.append(fut)
+            self._ensure_reactor()
         return fut
 
     def batch(self) -> _BatchScope:
@@ -652,23 +913,116 @@ class Session:
 
     def close(self) -> None:
         self.closed = True
+        # fail (and reclaim) everything still pending: planner-queued ops
+        # release nothing (not yet lowered), awaiting calls retire their
+        # epochs, parked recv waiters fail — no Future is left dangling
+        pending, self._pending = self._pending, []
+        self._fail_ops(pending, "session closed")
+        # in-flight groups: their CQEs will never be popped (the reactor
+        # dies with the session), so their futures fail here rather than
+        # strand any late waiter. Their scratch leases are deliberately
+        # LEAKED, not released: the NIC still owns those landing buffers
+        # (a READ completing after close would DMA into them), and the
+        # pool may be shared with live sessions — re-leasing bytes
+        # mid-DMA would corrupt whoever gets them next.
+        while self._groups:
+            for op in self._groups.popleft():
+                op.lease = None
+                self._fail_op(op, "session closed")
+        for cid in list(self._calls):
+            self._calls.pop(cid)._fail("session closed")
+        while self._recv_waiters:
+            self._recv_waiters.popleft()._fail("session closed")
         if self._window is not None:
             self._window.close()
             self._window = None
         for lease in self._held:
             lease.release()
         self._held.clear()
+        vq = self._t.vq
+        if vq is not None and isinstance(vq.msg_notify, _NotifyFwd):
+            vq.msg_notify = None
 
     # ------------------------------------------------------------- plumbing
     def _post(self, op: _Op) -> Future:
+        op.future._op = op
         if self.closed:
-            op.future._fail("session closed")
+            self._fail_op(op, "session closed")
             return op.future
         self.stat_ops += 1
         self._pending.append(op)
         if self._batch_depth == 0:
             self._arm_tick()
         return op.future
+
+    def _drop_pending(self, op: _Op) -> bool:
+        """Remove a planner-queued op before it is flushed."""
+        try:
+            self._pending.remove(op)
+            return True
+        except ValueError:
+            return False
+
+    def _cancel(self, fut: Future) -> bool:
+        if fut._done:
+            return False
+        op = fut._op
+        if op is None:
+            return False
+        removed = self._drop_pending(op)
+        cid = op.call_id
+        awaiting_reply = cid is not None and self._calls.get(cid) is fut
+        if not removed and not awaiting_reply:
+            return False          # one-sided op already on the wire
+        if awaiting_reply:
+            self._calls.pop(cid, None)
+        if removed and op.lease is not None:     # defensive: pre-lower ops
+            op.lease.release()                   # hold no lease normally
+            op.lease = None
+        self.stat_cancelled += 1
+        fut._fail("cancelled", kind=Cancelled)
+        return True
+
+    def _deadline_watch(self, op: _Op, cid: int) -> Generator:
+        """Deadline watchdog for one call epoch: fires exactly at the
+        deadline; a reply that beat it wins for free (first check)."""
+        yield self.env.timeout(op.deadline_us)
+        fut = op.future
+        if fut._done or self._calls.get(cid) is not fut:
+            if self._calls.get(cid) is fut:
+                # future settled elsewhere (e.g. send-side failure raced a
+                # live retry epoch): still retire the registration
+                self._calls.pop(cid, None)
+            return                # resolved / cancelled / superseded in time
+        # retire the epoch FIRST (popping cid from _calls IS the epoch
+        # mechanism: _on_msg drops any reply whose cid is unregistered):
+        # from this instant a late reply is stale and can never resolve
+        # the (possibly reincarnated) call
+        self._calls.pop(cid, None)
+        self._drop_pending(op)    # never-flushed request: unpost it
+        if op.retries > 0:
+            # idempotent retry: fresh epoch, fresh _Op (the timed-out
+            # instance may still be in flight and must keep its own lease
+            # accounting), same Future, re-posted through the planner
+            self.stat_retries += 1
+            new_cid = next(Session._call_ids)
+            new_op = _Op("send", fut, nbytes=op.nbytes, data=op.data,
+                         meta=op.meta, call_id=new_cid,
+                         deadline_us=op.deadline_us,
+                         retries=op.retries - 1)
+            self._calls[new_cid] = fut
+            self.env.process(self._deadline_watch(new_op, new_cid),
+                             f"sess{self.id}.deadline{new_cid}")
+            self._post(new_op)
+            return
+        self.stat_timeouts += 1
+        if op.stall_guard:
+            fut._fail(f"call {cid} stalled for {op.deadline_us}us with no "
+                      f"reply (lost reply? pass deadline_us= for typed "
+                      f"timeouts)", kind=SessionError)
+        else:
+            fut._fail(f"call {cid} missed its {op.deadline_us}us deadline "
+                      f"(reply lost or peer slow)", kind=CallTimeout)
 
     def _arm_tick(self) -> None:
         if not self._tick_armed:
@@ -741,6 +1095,7 @@ class Session:
                     self._groups.append(g)
                 for g in groups[posted:]:
                     self._fail_ops(g, f"flush segment not posted: {e}")
+                self._ensure_reactor()
                 return
             except _error_types() as e:
                 self._fail_ops(ops, f"flush failed: {e}")
@@ -748,6 +1103,7 @@ class Session:
             assert plan.n_cqes == n_cqes, (plan.n_cqes, n_cqes)
             for group in plan.groups(ops):
                 self._groups.append(group)
+            self._ensure_reactor()
             return
         self._fail_ops(ops, "flush failed: QP would not stay RTS")
 
@@ -791,6 +1147,13 @@ class Session:
                                remote_rkey=op.remote_rkey,
                                remote_off=op.remote_off, nbytes=8,
                                compare=op.compare, swap=op.swap)
+        if op.kind == "faa":
+            op.lease = yield from self.pool.lease(8)
+            return WorkRequest(op="FAA", wr_id=idx, local_mr=op.lease.mr,
+                               local_off=op.lease.off,
+                               remote_rkey=op.remote_rkey,
+                               remote_off=op.remote_off, nbytes=8,
+                               add=op.add)
         if op.kind == "send":
             op.lease = yield from self.pool.lease(max(op.nbytes, 1))
             op.lease.write(op.data)
@@ -811,41 +1174,159 @@ class Session:
     def _fail_op(self, op: _Op, reason: str) -> None:
         if op.lease is not None:
             op.lease.release()
+            op.lease = None
         if op.call_id is not None:
+            # retire the epoch even on send-side failure: a half-delivered
+            # request's reply must not resolve a recv() or a later call
             self._calls.pop(op.call_id, None)
         op.future._fail(reason)
 
     # -------------------------------------------------- completion reactor
     def _await(self, fut: Future) -> Generator:
-        spins = 0
+        """Wait for one future: flush it if still planner-pending, then
+        park on the future's own wake event. The session's reactor
+        process (one per session, spawned lazily while work is
+        outstanding) does all the popping — waiters never poll."""
         while not fut._done:
             if self._pending and self._batch_depth == 0:
                 yield from self._flush()
                 continue
-            progressed = yield from self._reap_entries()
-            if self._calls or self._recv_waiters:
-                # a recv()-only session must still get its window posted
-                # (calls post it at flush; bare recv has no flush)
-                yield from self._ensure_window()
-                progressed = (yield from self._reap_msgs()) or progressed
+            self._ensure_reactor()
+            ev = fut._subscribe()
             if fut._done:
                 break
-            if progressed:
-                spins = 0
-                continue
-            spins += 1
-            if spins > self.spin_limit:
-                raise SessionError("session await stalled "
-                                   "(lost completion or reply?)")
-            yield self.env.timeout(self.poll_us)
+            yield ev
 
-    def _reap_entries(self) -> Generator:
+    def _hubs(self) -> List[Broadcast]:
+        """The transport's current completion-notify sources: the physical
+        QP's CQE edge (plus the old QP's during a §4.6 transfer) and this
+        session's message hub."""
+        hubs = [self._notify]
+        qp = self._t.qp
+        if qp is not None:
+            hubs.append(qp.comp_notify)
+        vq = self._t.vq
+        if vq is not None and vq.old_qp is not None:
+            hubs.append(vq.old_qp.comp_notify)
+        return hubs
+
+    def _fresh_pokes(self, hubs: Sequence[Broadcast],
+                     consume: bool = True) -> bool:
+        """Has any source poked since the reactor last looked? A plain
+        integer compare — no event, no syscall."""
+        fresh = False
+        for h in hubs:
+            seen = self._seen_pokes.get(h, 0)
+            if h.stat_pokes != seen:
+                fresh = True
+                if consume:
+                    self._seen_pokes[h] = h.stat_pokes
+        return fresh
+
+    def _has_outstanding(self) -> bool:
+        return bool(self._groups or self._calls or self._recv_waiters)
+
+    def _ensure_reactor(self) -> None:
+        if not self._reactor_running and not self.closed \
+                and self._has_outstanding():
+            self._reactor_running = True
+            self.env.process(self._reactor(), f"sess{self.id}.reactor")
+
+    def _reactor(self) -> Generator:
+        """Event-driven completion reactor (ONE per session).
+
+        Blocks on completion-notify edges — never on poll ticks — and
+        pops only when an edge (or a free user-visible queue peek) says a
+        pop will be productive. Exits when nothing is outstanding; the
+        next flush / call / recv respawns it. A reactor that dies on a
+        transport error fails every outstanding Future with the reason
+        instead of crashing the simulation.
+        """
+        try:
+            while self._has_outstanding() and not self.closed:
+                if self._calls or self._recv_waiters:
+                    # a recv()-only session must still get its window
+                    # posted (calls post it at flush; bare recv doesn't)
+                    yield from self._ensure_window()
+                hubs = self._hubs()
+                if self._fresh_pokes(hubs) or self._t.has_entries() \
+                        or self._t.has_msgs():
+                    progressed = yield from self._reap_once()
+                    if not progressed:
+                        self.stat_idle_polls += 1
+                    continue
+                qp = self._t.qp
+                if qp is not None and qp.state == QPState.ERR \
+                        and self._groups:
+                    # silent ERR (no CQEs flowing): drive recovery with a
+                    # BOUNDED poll — the one place the reactor may tick
+                    self._err_spins += 1
+                    if self._err_spins > self.spin_limit:
+                        while self._groups:
+                            self._fail_ops(self._groups.popleft(),
+                                           "QP never recovered from ERR")
+                        continue
+                    yield from self._reap_entries()
+                    yield self.env.timeout(0.5)
+                    continue
+                self._err_spins = 0
+                if self._groups:
+                    # entry-side wait: ONE blocking crossing parked on the
+                    # CQE edge (qpop_wait) — the syscall charge lands at
+                    # entry and overlaps the wire flight, so the wake is
+                    # at the CQE instant with zero idle pops
+                    self.stat_notify_blocks += 1
+                    yield from self._reap_entries(block=True)
+                    # edges observed in-kernel are consumed; anything they
+                    # raced is still caught by the has_* peeks next loop
+                    self._fresh_pokes(self._hubs())
+                    continue
+                # message-side wait (calls / recv): park in user space on
+                # the notify hubs. Subscribe FIRST, then re-check the poke
+                # counters, so an edge racing this instant cannot be lost
+                ev = self.env.event()
+                for hub in hubs:
+                    hub.subscribe(ev)
+                if self._fresh_pokes(hubs, consume=False):
+                    continue
+                self.stat_notify_blocks += 1
+                yield ev
+        except _error_types() as e:
+            reason = f"session transport failed: {e}"
+            while self._groups:
+                self._fail_ops(self._groups.popleft(), reason)
+            for cid in list(self._calls):
+                self._calls.pop(cid)._fail(reason)
+            while self._recv_waiters:
+                self._recv_waiters.popleft()._fail(reason)
+        finally:
+            self._reactor_running = False
+            # work posted while the except-branch unwound (or a racing
+            # flush) must not strand: respawn — except on a closed
+            # session, whose in-flight groups die with it
+            if not self.closed:
+                self._ensure_reactor()
+
+    def _reap_once(self) -> Generator:
+        """One productive pop cycle: entries if the entry side has (or may
+        have) something, messages if the message queue shows something."""
+        progressed = False
+        if self._groups or self._errored or self._t.has_entries():
+            progressed = yield from self._reap_entries()
+        if (self._calls or self._recv_waiters) and self._t.has_msgs():
+            progressed = (yield from self._reap_msgs()) or progressed
+        return progressed
+
+    def _reap_entries(self, block: bool = False) -> Generator:
         # pop unconditionally: even with no groups of our own pending, the
         # poll drives _qpop_inner over the SHARED physical CQ — routing
         # other vqs' ERR CQEs to their owners and kicking the module's
         # background _recover (a stuck peer session must not depend on the
         # erroring session being the one that polls)
-        entries = yield from self._t.pop(max_n=64)
+        if block:
+            entries = yield from self._t.pop_wait(max_n=64)
+        else:
+            entries = yield from self._t.pop(max_n=64)
         for ent in entries:
             self._resolve_entry(ent)
         if self._errored and not self._groups:
@@ -877,7 +1358,7 @@ class Session:
                 op.lease.release()
             else:
                 op.future._resolve(ent)
-        elif op.kind == "cas":
+        elif op.kind in ("cas", "faa"):
             raw = op.lease.read(8)
             op.lease.release()
             op.future._resolve(int(raw.view(np.uint64)[0]))
@@ -930,8 +1411,18 @@ class Session:
         if self.module is not None:
             msg._owner = _SessionReplyHub.for_module(self.module, self.pool)
         reply_to = hdr.get("reply_to")
-        if reply_to is not None and reply_to in self._calls:
-            self._calls.pop(reply_to)._resolve(msg)
+        if reply_to is not None:
+            fut = self._calls.pop(reply_to, None)
+            if fut is not None:
+                fut._resolve(msg)
+            else:
+                # stale epoch: the call this reply answers timed out, was
+                # cancelled, or failed. DROP it — it must resolve neither
+                # a reincarnated call (fresh call-id) nor a recv() waiter.
+                # Its window slot still recycles normally in _reap_msgs.
+                self.stat_stale_replies += 1
+                _LOG.debug("session %d: dropped stale reply to call %s",
+                           self.id, reply_to)
             return
         if self._recv_waiters:
             self._recv_waiters.popleft()._resolve(msg)

@@ -179,6 +179,42 @@ class Resource:
         return len(self._queue)
 
 
+class Broadcast:
+    """Edge-triggered broadcast notifier (the completion-channel analogue).
+
+    Unlike :class:`Store` — where one ``put`` wakes exactly one getter —
+    a ``poke`` wakes EVERY currently-subscribed event: the shape of a
+    hardware completion event (``ibv_req_notify_cq``), where any number
+    of blocked consumers of a shared CQ must all observe the edge.
+
+    ``stat_pokes`` is monotonic, so a consumer can answer "anything new
+    since I last looked?" with a plain integer compare — no event, no
+    syscall. Lost-wakeup-free blocking is the standard arm-then-check
+    dance: subscribe an event FIRST, re-check the condition (the poke
+    counters), and only then yield the event; a poke landing between
+    subscribe and yield triggers the event, which resumes immediately.
+    """
+
+    __slots__ = ("env", "_waiters", "stat_pokes")
+
+    def __init__(self, env: Environment):
+        self.env = env
+        self._waiters: List[Event] = []
+        self.stat_pokes = 0
+
+    def subscribe(self, ev: Event) -> Event:
+        self._waiters.append(ev)
+        return ev
+
+    def poke(self) -> None:
+        self.stat_pokes += 1
+        if self._waiters:
+            waiters, self._waiters = self._waiters, []
+            for ev in waiters:
+                if not ev.triggered:
+                    ev.succeed()
+
+
 class Store:
     """Unbounded FIFO message channel."""
 

@@ -141,6 +141,18 @@ class VirtQueue:
     def connected(self) -> bool:
         return self.qp is not None
 
+    def ready_head(self) -> bool:
+        """User-visible peek: is the head CompEntry Ready to pop?
+
+        The software completion queue is shared memory in the LITE/KRCORE
+        model (Alg. 1's queues are mapped into the caller), so this is a
+        free load, not a syscall crossing. The notify-driven session
+        reactor uses it to decide whether a pop would be productive —
+        the mechanism that takes a blocked single-op caller's idle-poll
+        syscall count to zero.
+        """
+        return bool(self.comp_queue) and self.comp_queue[0].status == READY
+
     def mark_ready(self) -> Optional[CompEntry]:
         """Mark the first NotReady completion entry Ready (Alg. 2 l.30);
         returns the entry (truthy) or None."""

@@ -17,6 +17,18 @@ Two deployments:
 Bucket layout in storage-node memory (binary, little-endian):
     bucket b, slot s at offset (b * NSLOT + s) * 16:
         [ fingerprint: u32 | vlen: u32 | value: 8B ]
+
+Bucket-version path (Storm-style optimistic concurrency): the store owns
+a registered u64 **table version** that every mutation bumps. Client
+inserts are fully one-sided — claim an empty slot with an 8-byte CAS on
+its ``[fp|vlen]`` header word, WRITE the value, then publish by bumping
+the version with **fetch-and-add** (``session.faa``). The FAA replaced
+the old read-modify-write bump (READ version + WRITE version+1), which
+lost increments whenever two clients interleaved — the CAS-loop
+equivalent is kept as :meth:`RaceClient.bump_version_casloop` purely as
+the equivalence/contention oracle for the tests. Readers use
+:meth:`RaceClient.versioned_lookup`: version READ before and after the
+bucket READs, retry when a concurrent insert moved it (torn-read guard).
 """
 
 from __future__ import annotations
@@ -33,6 +45,9 @@ from repro.core.session import Session, connect
 NSLOT = 8
 SLOT_BYTES = 16
 _SLOT = struct.Struct("<II8s")
+#: vlen sentinel marking a slot claimed (CAS won) but not yet published —
+#: readers treat it as absent until the final header lands
+CLAIMED = 0xFFFFFFFF
 
 
 def _h1(k: int, nb: int) -> int:
@@ -47,7 +62,8 @@ def _fp(k: int) -> int:
 
 
 class RaceKVStore:
-    """Server side: owns the bucket array in registered memory."""
+    """Server side: owns the bucket array (and the table-version word)
+    in registered memory."""
 
     def __init__(self, node: Node, n_buckets: int = 4096):
         self.node = node
@@ -55,11 +71,26 @@ class RaceKVStore:
         nbytes = n_buckets * NSLOT * SLOT_BYTES
         self.addr = node.alloc(nbytes)
         self.mr = node.reg_mr(self.addr, nbytes)
+        # table version: a u64 in its own registered cacheline, bumped by
+        # every mutation (server-local inserts and client FAA publishes)
+        self.version_addr = node.alloc(64)
+        self.version_mr = node.reg_mr(self.version_addr, 64)
         if hasattr(node, "krcore"):
             node.krcore.validmr.add(self.mr)
+            node.krcore.validmr.add(self.version_mr)
+
+    @property
+    def version(self) -> int:
+        raw = self.node.read_bytes(self.version_addr, 0, 8)
+        return int(raw.view(np.uint64)[0])
+
+    def _bump_version_local(self) -> None:
+        buf = self.node.buffer(self.version_addr)
+        v = buf[:8].view(np.uint64)
+        v[0] = (int(v[0]) + 1) & 0xFFFFFFFFFFFFFFFF
 
     # storage-side insert (clients of the *elastic* app do one-sided GETs;
-    # inserts go through the storage node, as in disaggregated designs)
+    # inserts can also come from clients one-sided — RaceClient.insert)
     def insert(self, key: int, value: bytes) -> None:
         assert len(value) <= 8
         buf = self.node.buffer(self.addr)
@@ -70,6 +101,7 @@ class RaceKVStore:
                 if fp == 0 or fp == _fp(key):
                     _SLOT.pack_into(buf, off, _fp(key), len(value),
                                     value.ljust(8, b"\0"))
+                    self._bump_version_local()
                     return
         raise RuntimeError("RACE bucket overflow")
 
@@ -122,13 +154,123 @@ class RaceClient:
 
     @staticmethod
     def _scan_buckets(raw: bytes, key: int) -> Optional[bytes]:
-        """Local fingerprint compare over two gathered buckets."""
+        """Local fingerprint compare over two gathered buckets. A slot
+        still carrying the CLAIMED sentinel is an in-flight insert: not
+        yet published, reported absent."""
         want = _fp(key)
         for s in range(2 * NSLOT):
             fp, vlen, val = _SLOT.unpack_from(raw, s * SLOT_BYTES)
-            if fp == want:
+            if fp == want and vlen != CLAIMED:
                 return bytes(val[:vlen])
         return None
+
+    # ----------------------------------------- bucket-version path (FAA)
+    def read_version(self) -> Generator:
+        """One-sided READ of the table version (u64)."""
+        raw = yield from self.session.read(self.store.version_mr.rkey,
+                                           0, 8).wait()
+        return int(raw.view(np.uint64)[0])
+
+    def bump_version(self, n: int = 1) -> Generator:
+        """Publish a mutation: fetch-and-add the table version. ONE
+        wait-free atomic — this replaced the read-modify-write bump
+        (READ + WRITE of version+1) that dropped increments under
+        concurrent writers. Returns the pre-bump version."""
+        old = yield from self.session.faa(self.store.version_mr.rkey,
+                                          0, n).wait()
+        return old
+
+    def bump_version_casloop(self, n: int = 1) -> Generator:
+        """The retired read-modify-write idiom, made lossless the hard
+        way: READ + CAS, retried until the CAS wins. Kept ONLY as the
+        FAA-vs-CAS-loop equivalence/contention oracle for the tests —
+        under contention it costs 2+ round trips where faa costs one.
+        Returns the version this caller's increment applied to."""
+        while True:
+            cur = yield from self.read_version()
+            old = yield from self.session.cas(
+                self.store.version_mr.rkey, 0, compare=cur,
+                swap=(cur + n) & 0xFFFFFFFFFFFFFFFF).wait()
+            if old == cur:
+                return cur
+
+    def versioned_lookup(self, key: int, max_retries: int = 8) -> Generator:
+        """Torn-read-guarded lookup: version READ rides the same doorbell
+        as the two bucket READs, and a trailing version READ detects a
+        concurrent mutation — retry instead of returning a half-written
+        slot. Returns (value-or-None, version)."""
+        off1, off2 = self.store.bucket_offsets(key)
+        vkey = self.store.version_mr.rkey
+        for _ in range(max_retries):
+            with self.session.batch():
+                vf = self.session.read(vkey, 0, 8)
+                futs = [self.session.read(self.store.mr.rkey, off,
+                                          self.BUCKET_BYTES)
+                        for off in (off1, off2)]
+            v0_raw, b1, b2 = yield from self.session.wait_all([vf] + futs)
+            v0 = int(v0_raw.view(np.uint64)[0])
+            v1_raw = yield from self.session.read(vkey, 0, 8).wait()
+            v1 = int(v1_raw.view(np.uint64)[0])
+            if v0 == v1:
+                return (self._scan_buckets(b1.tobytes() + b2.tobytes(),
+                                           key), v1)
+        # writer storm: fall back to an unguarded read of the last state
+        val = yield from self.lookup(key)
+        ver = yield from self.read_version()
+        return (val, ver)
+
+    def insert(self, key: int, value: bytes) -> Generator:
+        """Fully one-sided client insert (RACE's CAS-claim protocol):
+
+        1. READ both buckets (one doorbell);
+        2. CAS an empty slot's ``[fp|vlen]`` header from 0 to
+           ``[fp|CLAIMED]`` — the sentinel keeps readers from consuming
+           the slot before its value lands;
+        3. WRITE the final ``[fp|vlen|value]`` slot image;
+        4. publish with :meth:`bump_version` — ONE fetch-and-add, where
+           the pre-FAA idiom was a racy READ + WRITE of version+1.
+
+        A lost CAS (another client claimed first) re-reads and retries.
+        Re-inserting an existing key updates its slot in place. Returns
+        the slot's byte offset."""
+        assert len(value) <= 8
+        fp = _fp(key)
+        final = _SLOT.pack(fp, len(value), value.ljust(8, b"\0"))
+        claim = np.uint64(fp | (CLAIMED << 32))
+        for _ in range(4 * NSLOT):
+            off1, off2 = self.store.bucket_offsets(key)
+            with self.session.batch():
+                futs = [self.session.read(self.store.mr.rkey, off,
+                                          self.BUCKET_BYTES)
+                        for off in (off1, off2)]
+            b1, b2 = yield from self.session.wait_all(futs)
+            raw = b1.tobytes() + b2.tobytes()
+
+            def slot_off(s: int) -> int:
+                return (off1 if s < NSLOT else off2) \
+                    + (s % NSLOT) * SLOT_BYTES
+
+            for s in range(2 * NSLOT):       # update-in-place on re-insert
+                sfp, vlen, _val = _SLOT.unpack_from(raw, s * SLOT_BYTES)
+                if sfp == fp and vlen != CLAIMED:
+                    yield from self.session.write(
+                        self.store.mr.rkey, slot_off(s), final).wait()
+                    yield from self.bump_version()
+                    return slot_off(s)
+            for s in range(2 * NSLOT):
+                sfp, _vlen, _val = _SLOT.unpack_from(raw, s * SLOT_BYTES)
+                if sfp != 0:
+                    continue
+                old = yield from self.session.cas(
+                    self.store.mr.rkey, slot_off(s), compare=0,
+                    swap=int(claim)).wait()
+                if old != 0:
+                    break                    # lost the claim: re-read
+                yield from self.session.write(
+                    self.store.mr.rkey, slot_off(s), final).wait()
+                yield from self.bump_version()
+                return slot_off(s)
+        raise RuntimeError("RACE insert: no claimable slot")
 
     def lookup_many(self, keys: List[int]) -> Generator:
         """Batched lookup: both bucket READs of EVERY key in a chunk ride

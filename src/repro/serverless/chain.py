@@ -317,6 +317,11 @@ class ChainRunner:
         try:
             yield from sess.wait_all(futs)
         except SessionError as e:
+            # reclaim before the failover retry: cancel any slab sends
+            # still planner-pending (never posted) so they neither ride a
+            # later flush to the dead node nor leak their futures
+            for f in futs:
+                f.cancel()
             raise HopError(f"hop {src}->{dst} completions errored: {e}") \
                 from e
         hop.doorbells += qp.stat_doorbells - d0

@@ -33,7 +33,8 @@ from typing import Dict, Generator, List, Optional, Sequence
 import numpy as np
 
 from repro.core.cluster import Cluster
-from repro.core.session import Listener, Session, connect, listen
+from repro.core.session import (CallTimeout, Listener, Session, connect,
+                                listen)
 
 from .container import Container, ContainerPool
 from .registry import FunctionDef, FunctionRegistry
@@ -56,6 +57,10 @@ class InvocationRecord:
     #: over session.call); the request/response wire time is then
     #: total_us minus queue_us and the worker-side phase fields
     response_path: bool = False
+    #: closed loop only: the call burned through its deadline (and any
+    #: configured retries) — end_us is the CallTimeout instant, and the
+    #: worker-side phase fields are unknown
+    timed_out: bool = False
 
     @property
     def queue_us(self) -> float:
@@ -97,7 +102,9 @@ class InvocationGateway:
                  worker_nodes: Optional[Sequence[str]] = None,
                  data_node: Optional[str] = None,
                  caller_node: Optional[str] = None,
-                 response_base_port: int = 7040):
+                 response_base_port: int = 7040,
+                 call_deadline_us: Optional[float] = None,
+                 call_retries: int = 0):
         self.cluster = cluster
         self.env = cluster.env
         self.registry = registry
@@ -109,6 +116,14 @@ class InvocationGateway:
         #: closing the loop: node the responses return to (None: inline)
         self.caller_node = caller_node
         self.response_base_port = response_base_port
+        #: closed-loop request deadline: a dropped reply (worker wedged or
+        #: died mid-serve) fails ONLY that invocation with CallTimeout at
+        #: this bound instead of stalling the whole trace; None = wait
+        #: forever (the pre-deadline behaviour)
+        self.call_deadline_us = call_deadline_us
+        #: opt-in idempotent re-post of a timed-out request (the serve
+        #: path is a pure function of the descriptor, so retrying is safe)
+        self.call_retries = call_retries
         self._data_mr = None
         self._worker_listeners: Dict[str, Listener] = {}
         self._caller_sessions: Dict[str, Session] = {}
@@ -223,8 +238,17 @@ class InvocationGateway:
         request = np.zeros(64, np.uint8)            # invocation descriptor
         fut = sess.call(request, meta={"fn": fn.name,
                                        "payload_bytes": payload_bytes,
-                                       "inv": rec.inv_id})
-        reply = yield from fut.wait()
+                                       "inv": rec.inv_id},
+                        deadline_us=self.call_deadline_us,
+                        retries=self.call_retries)
+        try:
+            reply = yield from fut.wait()
+        except CallTimeout:
+            # deadline semantics: this invocation fails alone; the caller
+            # session (and every other in-flight call on it) is untouched
+            rec.timed_out = True
+            rec.kind = "timeout"
+            return
         t = reply.hdr.get("timings", {})
         rec.kind = t.get("kind", "?")
         rec.fork_us = t.get("fork_us", 0.0)
@@ -305,6 +329,7 @@ class InvocationGateway:
         warm = [r for r in self.records if r.kind == "warm"]
         out = {
             "n": len(self.records),
+            "timeouts": sum(1 for r in self.records if r.timed_out),
             "p50_us": float(np.percentile(tot, 50)),
             "p99_us": float(np.percentile(tot, 99)),
             "p999_us": float(np.percentile(tot, 99.9)),

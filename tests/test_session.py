@@ -5,6 +5,7 @@ flushes fail only their own futures (vq-ownership routing) and leave the
 session usable after recovery, BufferPool lease accounting, CAS atomics,
 call/reply correlation, and the deprecated legacy shim surface."""
 
+import logging
 import math
 import warnings
 
@@ -12,10 +13,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (BufferPool, SessionError, WorkRequest, connect,
-                        listen, make_cluster, plan_batch)
+from repro.core import (BufferPool, CallTimeout, Cancelled, SessionError,
+                        WorkRequest, connect, listen, make_cluster,
+                        plan_batch)
 from repro.core.plan import effective_interval, segment_limit
 from repro.core.qp import QPState
+from repro.core.session import _RecvWindow
 
 
 def build_cluster(n_nodes=2):
@@ -441,6 +444,479 @@ def test_legacy_shim_warns_once_and_stays_functional():
         assert rc == 0
         ent = yield from legacy.qpop_block(m0, qd)
         assert not ent.err
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+# =================================== fault injection: deadlines / cancel
+def test_dropped_reply_times_out_at_deadline_not_spin_limit():
+    """A server that swallows a request must fail ONLY that call's
+    Future, with CallTimeout, AT the requested deadline — not by wedging
+    until a spin-limit guard fires — and the session (including its recv
+    window) stays fully usable for the next call."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    state = {}
+
+    def server():
+        lst = yield from listen(m1, 8810, msg_bytes=1024, window=4)
+        msgs = yield from lst.recv()
+        state["dropped"] = msgs[0].payload.tobytes()     # no reply: lost
+        msgs = yield from lst.recv()
+        yield from msgs[0].reply(b"second-ok")
+        return True
+
+    def client():
+        sess = yield from connect(m0, "n1", port=8810)
+        t0 = env.now
+        fut = sess.call(b"will-be-dropped", deadline_us=300.0)
+        with pytest.raises(CallTimeout):
+            yield from fut.wait()
+        elapsed = env.now - t0
+        assert 300.0 <= elapsed < 301.0, elapsed      # AT the deadline
+        assert sess.stat_timeouts == 1
+        assert sess.stat_idle_polls == 0              # no poll ticks burned
+        # the session is not poisoned: a fresh call round-trips
+        rep = yield from sess.call(b"second", deadline_us=5000.0).wait()
+        assert rep.payload.tobytes() == b"second-ok"
+        return True
+
+    sp = env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered
+    assert state["dropped"] == b"will-be-dropped"
+
+
+def test_deadline_less_call_stalls_loudly_not_silently():
+    """A call WITHOUT deadline_us must not regress into a silent
+    forever-park when the reply is lost: it fails with a plain (untyped)
+    SessionError at the legacy stall bound (spin_limit * poll_us) — the
+    same loudness the old spin-limit guard provided, minus the 200k
+    wasted syscalls."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def blackhole():
+        lst = yield from listen(m1, 8815, msg_bytes=1024, window=4)
+        while True:
+            yield from lst.recv()
+
+    def client():
+        sess = yield from connect(m0, "n1", port=8815)
+        sess.spin_limit, sess.poll_us = 1000, 0.2    # guard at 200us
+        t0 = env.now
+        fut = sess.call(b"swallowed")                # NO deadline_us
+        with pytest.raises(SessionError) as ei:
+            yield from fut.wait()
+        assert not isinstance(ei.value, CallTimeout)  # untyped: no deadline
+        assert "stalled" in str(ei.value)
+        assert 200.0 <= env.now - t0 < 201.0
+        assert sess.stat_idle_polls == 0
+        return True
+
+    env.process(blackhole(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert cp.triggered
+
+
+def test_failed_calls_leak_no_pool_bytes():
+    """Regression (satellite): every timed-out call must reclaim its
+    scratch lease and leave the posted recv window intact — N failed
+    calls leave BufferPool.bytes_free unchanged."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def blackhole():
+        lst = yield from listen(m1, 8811, msg_bytes=1024, window=4)
+        while True:
+            yield from lst.recv()                     # swallow everything
+
+    def client():
+        sess = yield from connect(m0, "n1", port=8811)
+        # warm-up timeout: window posted + pool grown to steady state
+        with pytest.raises(CallTimeout):
+            yield from sess.call(b"w", deadline_us=100.0).wait()
+        baseline = sess.pool.bytes_free
+        total = sess.pool.bytes_total
+        for i in range(5):
+            with pytest.raises(CallTimeout):
+                yield from sess.call(b"x" * 32, deadline_us=100.0).wait()
+            assert sess.pool.bytes_free == baseline, f"leak after call {i}"
+        assert sess.pool.bytes_total == total         # no silent regrowth
+        assert sess.stat_timeouts == 6
+        return True
+
+    env.process(blackhole(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert cp.triggered
+
+
+def test_stale_reply_epoch_rejection_and_idempotent_retry():
+    """A reply that arrives after its call's deadline must be DROPPED by
+    call-id epoch — it can neither resolve the retried (reincarnated)
+    call nor leak into recv() — while the opt-in retry re-posts through
+    the planner and resolves from ITS OWN reply."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    state = {"served": 0}
+
+    def server():
+        lst = yield from listen(m1, 8812, msg_bytes=1024, window=8)
+
+        def serve(msg):
+            first = state["served"] == 0
+            state["served"] += 1
+            if first:
+                yield env.timeout(1500.0)             # way past deadline
+                yield from msg.reply(b"late")
+            else:
+                yield from msg.reply(b"fresh")
+
+        while True:
+            msgs = yield from lst.recv()
+            for m in msgs:                            # concurrent serve
+                env.process(serve(m), "serve")
+
+    def client():
+        sess = yield from connect(m0, "n1", port=8812)
+        fut = sess.call(b"req", deadline_us=400.0, retries=1)
+        rep = yield from fut.wait()
+        assert rep.payload.tobytes() == b"fresh"      # the RETRY's reply
+        assert sess.stat_retries == 1
+        assert sess.stat_timeouts == 0                # retry succeeded
+        yield env.timeout(2000.0)       # the late reply lands meanwhile
+        rep = yield from sess.call(b"again", deadline_us=5000.0).wait()
+        assert rep.payload.tobytes() == b"fresh"
+        assert sess.stat_stale_replies == 1           # b"late" was dropped
+        return True
+
+    env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert cp.triggered
+
+
+def test_cancel_pending_planner_op_posts_nothing():
+    """Future.cancel on a planner-pending op removes it BEFORE the flush:
+    the batch lowers without it, the cancelled future raises Cancelled,
+    and the surviving ops are unaffected."""
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        cluster.node("n1").buffer(mr_srv.addr)[:16] = 3
+        sess = yield from connect(m0, "n1")
+        yield from sess.read(mr_srv.rkey, 0, 8).wait()          # warm
+        qp = sess.qp
+        posted = qp.stat_posted
+        with sess.batch():
+            f1 = sess.read(mr_srv.rkey, 0, 8)
+            f2 = sess.read(mr_srv.rkey, 8, 8)
+            assert f1.cancel()
+            assert not f1.cancel()                   # already done
+        v2 = yield from f2.wait()
+        assert (v2 == 3).all()
+        with pytest.raises(Cancelled):
+            yield from f1.wait()
+        assert f1.cancelled
+        assert qp.stat_posted == posted + 1          # only f2 hit the wire
+        assert sess.stat_cancelled == 1
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_cancel_then_complete_race_drops_late_reply():
+    """cancel() racing a slow server: the Future fails Cancelled
+    first-writer-wins, the call-id epoch is retired, and the reply that
+    eventually arrives is dropped as stale — it never resolves a later
+    call or a recv()."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def server():
+        lst = yield from listen(m1, 8813, msg_bytes=1024, window=4)
+
+        def serve(msg):
+            yield env.timeout(200.0)
+            yield from msg.reply(msg.payload)
+
+        while True:
+            msgs = yield from lst.recv()
+            for m in msgs:
+                env.process(serve(m), "serve")
+
+    def client():
+        sess = yield from connect(m0, "n1", port=8813)
+        fut = sess.call(b"slow-echo")
+        yield env.timeout(50.0)                      # request in flight
+        assert fut.cancel()
+        with pytest.raises(Cancelled):
+            yield from fut.wait()
+        yield env.timeout(500.0)                     # late echo lands
+        rep = yield from sess.call(b"second", deadline_us=5000.0).wait()
+        assert rep.payload.tobytes() == b"second"    # NOT the stale echo
+        assert sess.stat_stale_replies == 1
+        assert sess.stat_cancelled == 1
+        return True
+
+    env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert cp.triggered
+
+
+def test_future_double_transition_first_writer_wins(caplog):
+    """Satellite regression: a late _fail after _resolve (ERR CQE for an
+    already-satisfied op) must neither overwrite state nor pass silently
+    — first-writer-wins, counted, and logged."""
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        sess = yield from connect(m0, "n1")
+        fut = sess.read(mr_srv.rkey, 0, 8)
+        val = yield from fut.wait()
+        with caplog.at_level(logging.WARNING, "repro.core.session"):
+            assert not fut._fail("late ERR CQE")
+            assert not fut._resolve(b"other")
+        assert fut.error is None                     # outcome unchanged
+        assert (fut.value == val).all()
+        assert sess.stat_double_transitions == 2
+        assert sum("double-transition" in r.message
+                   for r in caplog.records) == 2
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+# ==================================================== fetch-and-add (FAA)
+def test_faa_basics_and_wraparound():
+    cluster = build_cluster()
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def scenario():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        sess = yield from connect(m0, "n1")
+        old = yield from sess.faa(mr_srv.rkey, 0, 5).wait()
+        assert old == 0
+        old = yield from sess.faa(mr_srv.rkey, 0, 7).wait()
+        assert old == 5
+        got = yield from sess.read(mr_srv.rkey, 0, 8).wait()
+        assert int(got.view(np.uint64)[0]) == 12
+        # u64 wraparound
+        old = yield from sess.faa(mr_srv.rkey, 0,
+                                  (1 << 64) - 13).wait()
+        assert old == 12
+        got = yield from sess.read(mr_srv.rkey, 0, 8).wait()
+        assert int(got.view(np.uint64)[0]) == (1 << 64) - 1
+        old = yield from sess.faa(mr_srv.rkey, 0, 3).wait()
+        assert old == (1 << 64) - 1
+        got = yield from sess.read(mr_srv.rkey, 0, 8).wait()
+        assert int(got.view(np.uint64)[0]) == 2
+        return True
+
+    assert cluster.env.run_process(scenario(), "s")
+
+
+def test_faa_vs_cas_loop_equivalence_oracle():
+    """Two concurrent writers mixing faa increments with the CAS-loop
+    idiom: every increment lands exactly once (final == total), and the
+    FAA tickets are unique — the property that makes it a drop-in for
+    the read-modify-write it replaced."""
+    cluster = build_cluster(n_nodes=3)
+    env = cluster.env
+    m1 = cluster.module("n1")
+    tickets = []
+
+    def writer(module, n_ops, use_faa_on_even):
+        def run():
+            mr = state["mr"]
+            sess = yield from connect(module, "n1")
+            for i in range(n_ops):
+                if (i % 2 == 0) == use_faa_on_even:
+                    old = yield from sess.faa(mr.rkey, 0, 1).wait()
+                    tickets.append(old)
+                else:
+                    while True:                      # the retired idiom
+                        raw = yield from sess.read(mr.rkey, 0, 8).wait()
+                        cur = int(raw.view(np.uint64)[0])
+                        old = yield from sess.cas(mr.rkey, 0,
+                                                  compare=cur,
+                                                  swap=cur + 1).wait()
+                        if old == cur:
+                            break
+            return True
+        return run
+
+    state = {}
+
+    def setup():
+        state["mr"] = yield from m1.sys_qreg_mr(4096)
+        return True
+
+    assert env.run_process(setup(), "setup")
+    pa = env.process(writer(cluster.module("n0"), 16, True)(), "wa")
+    pb = env.process(writer(cluster.module("n2"), 16, False)(), "wb")
+    env.run()
+    assert pa.triggered and pb.triggered
+
+    def check():
+        sess = yield from connect(cluster.module("n0"), "n1")
+        raw = yield from sess.read(state["mr"].rkey, 0, 8).wait()
+        return int(raw.view(np.uint64)[0])
+
+    assert env.run_process(check(), "chk") == 32     # nothing lost
+    assert len(set(tickets)) == len(tickets)         # FAA tickets unique
+
+
+def test_race_client_insert_and_faa_version_path():
+    """The RACE client's bucket-version path rides faa: a one-sided
+    insert claims its slot by CAS, publishes by FAA (one op — measured),
+    and versioned_lookup sees a stable version around a quiescent read."""
+    from repro.kvs import RaceKVStore
+    from repro.kvs.race import RaceClient
+
+    cluster = build_cluster()
+    env = cluster.env
+    store = RaceKVStore(cluster.node("n1"), n_buckets=256)
+    client = RaceClient(cluster.module("n0"), store, mr_bytes=8192)
+
+    def scenario():
+        yield from client.bootstrap()
+        v0 = store.version
+        off = yield from client.insert(7, b"seven")
+        assert store.version == v0 + 1               # FAA published
+        val = yield from client.lookup(7)
+        assert val == b"seven"
+        val, ver = yield from client.versioned_lookup(7)
+        assert val == b"seven" and ver == store.version
+        # server-side inserts share the same version word
+        store.insert(9, b"nine")
+        assert store.version == v0 + 2
+        # the bump itself is ONE posted WR (vs >= 2 for the CAS loop)
+        yield from client.bump_version()             # warm MR checks
+        yield from client.bump_version_casloop()
+        qp = client.session.qp
+        p0 = qp.stat_posted
+        yield from client.bump_version()
+        faa_ops = qp.stat_posted - p0
+        p0 = qp.stat_posted
+        yield from client.bump_version_casloop()
+        cas_ops = qp.stat_posted - p0
+        assert faa_ops == 1 and cas_ops >= 2, (faa_ops, cas_ops)
+        # update-in-place on re-insert
+        yield from client.insert(7, b"SEVEN")
+        val = yield from client.lookup(7)
+        assert val == b"SEVEN"
+        return True
+
+    assert env.run_process(scenario(), "s")
+
+
+# ================================= notify-driven reactor: idle-poll gate
+def test_blocked_callers_issue_zero_idle_polls():
+    """The tentpole invariant: a blocked single-op caller — one-sided
+    READ and a two-sided call parked on a round trip — never burns an
+    unproductive pop; wake-ups ride the completion-notify edge."""
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+
+    def server():
+        lst = yield from listen(m1, 8814, msg_bytes=1024, window=4)
+        msgs = yield from lst.recv()
+        yield from msgs[0].reply(b"pong")
+        return True
+
+    def client():
+        mr_srv = yield from m1.sys_qreg_mr(4096)
+        sess = yield from connect(m0, "n1")
+        yield from sess.read(mr_srv.rkey, 0, 64).wait()          # warm
+        sess.stat_idle_polls = 0
+        for _ in range(4):
+            yield from sess.read(mr_srv.rkey, 0, 64).wait()
+        assert sess.stat_idle_polls == 0
+        assert sess.stat_notify_blocks >= 4
+        csess = yield from connect(m0, "n1", port=8814)
+        rep = yield from csess.call(b"ping", deadline_us=10_000.0).wait()
+        assert rep.payload.tobytes() == b"pong"
+        assert csess.stat_idle_polls == 0
+        return True
+
+    sp = env.process(server(), "srv")
+    cp = env.process(client(), "cli")
+    env.run()
+    assert sp.triggered and cp.triggered
+
+
+# ============================== recv-window resize under in-flight recvs
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(["recv", "grow_bytes", "grow_window"]),
+                min_size=1, max_size=24))
+def test_recv_window_resize_defers_until_recvs_drain(script):
+    """Satellite property test: interleaved resize/recv must never
+    strand a posted slot. A slot posted at the old (smaller) size is
+    retired only when its in-flight recv drains — never released while
+    posted — and the window converges to the new geometry with every
+    byte of pool scratch accounted for at close."""
+    cluster = build_cluster(n_nodes=1)
+    node = cluster.node("n0")
+    pool = BufferPool(node=node, grow_bytes=4096)
+    win = _RecvWindow(pool, msg_bytes=64, window=2)
+    posted = {}                       # wr_id -> length the "NIC" holds
+
+    def push_recv(mr, off, length, wr_id):
+        posted[wr_id] = length
+        return
+        yield                         # generator marker (unreached)
+
+    def scenario():
+        yield from win.ensure(push_recv)
+        for step in script:
+            if step == "recv" and win.slots:
+                wr_id = min(win.slots)       # FIFO-ish hardware drain
+                del posted[wr_id]
+                win.take_payload(wr_id, 16)
+                yield from win.recycle(wr_id, push_recv)
+                yield from win.ensure(push_recv)
+            elif step == "grow_bytes":
+                win.resize(win.window, win.msg_bytes * 2)
+                yield from win.ensure(push_recv)
+            elif step == "grow_window":
+                win.resize(win.window + 1, win.msg_bytes)
+                yield from win.ensure(push_recv)
+            # invariants, every step:
+            assert len(win.slots) == win.window
+            assert set(win.slots) == set(posted)     # nothing stranded
+            want = pool._align(win.msg_bytes)
+            for wr_id, lease in win.slots.items():
+                assert not lease.released            # posted => held
+                if wr_id not in win._retire:
+                    assert lease.nbytes >= want      # new slots new size
+                else:
+                    assert lease.nbytes < want       # retirees only
+        # drain every pre-resize slot: the window converges to new size
+        while win._retire:
+            wr_id = min(win._retire)
+            del posted[wr_id]
+            yield from win.recycle(wr_id, push_recv)
+            yield from win.ensure(push_recv)
+        want = pool._align(win.msg_bytes)
+        assert all(l.nbytes >= want for l in win.slots.values())
+        win.close()
+        assert pool.bytes_free == pool.bytes_total   # every byte back
         return True
 
     assert cluster.env.run_process(scenario(), "s")

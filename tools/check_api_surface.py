@@ -16,12 +16,21 @@ Two invariants of the session-layer API redesign:
    ``repro.core.legacy`` twice must emit a single DeprecationWarning and
    leave the module usable — old client code keeps working, loudly.
 
+3. **The hardened RPC surface is complete**: the session layer must
+   export the typed failure classes (``CallTimeout`` / ``Cancelled``
+   subclassing ``SessionError``), ``Session.call`` must take
+   ``deadline_us`` and ``retries``, ``Session.faa`` and
+   ``Future.cancel`` must exist, and ``FAA`` must be a valid fabric
+   opcode — so clients can rely on deadline/cancel/fetch-and-add without
+   feature-probing.
+
 Run: ``python tools/check_api_surface.py`` (repo root; exit 0 = pass).
 """
 
 from __future__ import annotations
 
 import importlib
+import inspect
 import os
 import re
 import sys
@@ -81,14 +90,44 @@ def check_legacy_warns_once() -> int:
     return 0
 
 
+def check_hardened_rpc_surface() -> int:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    bad = 0
+    import repro.core as core
+    from repro.core import qp as qp_mod
+
+    for name in ("CallTimeout", "Cancelled"):
+        cls = getattr(core, name, None)
+        if cls is None or not issubclass(cls, core.SessionError):
+            print(f"FAIL: repro.core.{name} missing or not a SessionError")
+            bad += 1
+    call_params = inspect.signature(core.Session.call).parameters
+    for param in ("deadline_us", "retries"):
+        if param not in call_params:
+            print(f"FAIL: Session.call missing the {param!r} parameter")
+            bad += 1
+    if not callable(getattr(core.Session, "faa", None)):
+        print("FAIL: Session.faa missing (fetch-and-add endpoint)")
+        bad += 1
+    if not callable(getattr(core.Future, "cancel", None)):
+        print("FAIL: Future.cancel missing")
+        bad += 1
+    if "FAA" not in qp_mod.VALID_OPS:
+        print("FAIL: FAA not a valid fabric opcode")
+        bad += 1
+    return bad
+
+
 def main() -> int:
     bad = scan_raw_callsites()
     bad += check_legacy_warns_once()
+    bad += check_hardened_rpc_surface()
     if bad:
         print(f"api-surface check FAILED ({bad} violation(s))")
         return 1
     print("api-surface check OK: clients are session-only outside core/, "
-          "legacy shim warns once")
+          "legacy shim warns once, hardened RPC surface "
+          "(CallTimeout/Cancelled/deadline/retries/faa/cancel) complete")
     return 0
 
 
