@@ -1,0 +1,428 @@
+"""Elastic disaggregated-KV benchmark (paper §6, Fig 10/11 analogues).
+
+Emits ``BENCH_elastic_kv.json`` (repo root by default):
+
+    PYTHONPATH=src python -m benchmarks.elastic_kv
+    PYTHONPATH=src python -m benchmarks.elastic_kv --smoke   # tiny, CI
+
+Three suites on the simulated microsecond clock:
+
+* ``bootstrap``  — the headline elasticity claim: a spike spawns fresh
+  compute workers that attach to the SHARDED remote store. KRCORE
+  attach = one batched directory doorbell + microsecond connects; the
+  verbs baseline pays driver init + per-connection QP bring-up. Gate:
+  >= 80% attach-time reduction (paper: 83% for the whole bootstrap).
+* ``migration``  — open-loop fenced lookups (plus a concurrent writer)
+  across a LIVE shard migration: p50/p99 per phase, redirect counts,
+  and the safety gates (zero torn reads, every value within the
+  sequential oracle's bounds).
+* ``autoscaler`` — the worker-pull scaler under a spike trace, with
+  worker bootstrap on the scale-out path: spike recovery (drain lag
+  after the last arrival) with KRCORE vs verbs-booted workers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_elastic_kv.json")
+
+_VAL = struct.Struct("<II")      # seq twice: a torn read shows mixed halves
+
+
+def _enc(seq: int) -> bytes:
+    return _VAL.pack(seq & 0xFFFFFFFF, seq & 0xFFFFFFFF)
+
+
+def _dec(raw: bytes):
+    """-> (seq, torn?)"""
+    a, b = _VAL.unpack_from(raw, 0)
+    return a, a != b
+
+
+def _mk(n_compute: int, n_mem: int):
+    from repro.core import make_cluster
+    cluster = make_cluster(n_nodes=n_compute + n_mem, n_meta=1)
+    mem = [f"n{i}" for i in range(n_compute, n_compute + n_mem)]
+    return cluster, mem
+
+
+def _verbs_attach(cluster, svc, home_node: str):
+    """Verbs-style cold-connect worker bootstrap: driver init + RC to the
+    meta node (directory) + one sync READ per shard record + RC per
+    memory node + scratch registration. Returns (proc, mr) ready to
+    serve lookups with sync bucket READs."""
+    from repro.core import VerbsProcess
+    env = cluster.env
+    proc = VerbsProcess(cluster.node(home_node))
+    yield from proc.connect(svc.meta.node)
+    mr = yield from proc.reg_mr(4096)
+    kv = svc.meta.kv
+    from repro.dkv import shard_key
+    for sid in range(svc.n_shards):
+        slot = kv.slot_of(shard_key(svc.name, sid))
+        yield from proc.read_sync(svc.meta.node.name, mr, 0, kv.mr,
+                                  slot * 32, 32)
+    for node in {st.node.name for st in svc.stores.values()}:
+        yield from proc.connect(cluster.node(node))
+    return proc, mr
+
+
+def _verbs_get(cluster, svc, proc, mr, key: int):
+    """Serve one lookup the verbs way: two sync bucket READs + local
+    fingerprint scan (one round trip each — no doorbell batching)."""
+    from repro.kvs.race import RaceClient
+    store = svc.stores[svc.shard_of(key)]
+    off1, off2 = store.bucket_offsets(key)
+    bb = RaceClient.BUCKET_BYTES
+    yield from proc.read_sync(store.node.name, mr, 0, store.mr, off1, bb)
+    yield from proc.read_sync(store.node.name, mr, bb, store.mr, off2, bb)
+    raw = proc.node.read_bytes(mr.addr, 0, 2 * bb).tobytes()
+    return RaceClient._scan_buckets(raw, key)
+
+
+# ------------------------------------------------------- suite: bootstrap
+def bench_bootstrap(n_workers: int = 12, n_compute: int = 2,
+                    n_mem: int = 2, n_shards: int = 4,
+                    n_buckets: int = 128) -> Dict:
+    from repro.dkv import DkvService
+
+    out: Dict = {"n_workers": n_workers, "n_mem": n_mem,
+                 "n_shards": n_shards}
+    for kind in ("krcore", "verbs"):
+        cluster, mem = _mk(n_compute, n_mem)
+        env = cluster.env
+        svc = DkvService(cluster, mem, n_shards=n_shards,
+                         n_buckets=n_buckets)
+        for k in range(1, 65):
+            svc.seed(k, bytes([k % 250 + 1]))
+        attach: List[float] = []
+
+        def worker(i):
+            home = f"n{i % n_compute}"
+            key = 1 + i % 64
+            if kind == "krcore":
+                from repro.dkv import DkvClient
+                cl = DkvClient(cluster.module(home))
+                t0 = env.now
+                yield from cl.bootstrap()
+                attach.append(env.now - t0)
+                v = yield from cl.get(key)
+            else:
+                t0 = env.now
+                proc, mr = yield from _verbs_attach(cluster, svc, home)
+                attach.append(env.now - t0)
+                v = yield from _verbs_get(cluster, svc, proc, mr, key)
+            assert v == bytes([key % 250 + 1]), (kind, key, v)
+            return env.now
+
+        def coordinator():
+            cm = cluster.fabric.cm
+            t0 = env.now
+            procs = []
+            for i in range(n_workers):
+                # forks pipeline across the compute machines
+                yield env.timeout(cm.fork_worker_us / n_compute)
+                procs.append(env.process(worker(i), f"w{i}"))
+            for p in procs:
+                yield p
+            return env.now - t0
+
+        fleet_us = env.run_process(coordinator(), "coord")
+        a = np.array(attach)
+        out[f"{kind}_attach_mean_us"] = round(float(a.mean()), 3)
+        out[f"{kind}_attach_p50_us"] = round(float(np.percentile(a, 50)), 3)
+        out[f"{kind}_attach_p99_us"] = round(float(np.percentile(a, 99)), 3)
+        out[f"{kind}_fleet_ready_us"] = round(float(fleet_us), 1)
+    out["attach_reduction_vs_verbs"] = round(
+        1.0 - out["krcore_attach_mean_us"] / out["verbs_attach_mean_us"], 4)
+    out["fleet_reduction_vs_verbs"] = round(
+        1.0 - out["krcore_fleet_ready_us"] / out["verbs_fleet_ready_us"], 4)
+    return out
+
+
+# ------------------------------------------------------ suite: migration
+def bench_migration(n_reads: int = 120, n_buckets: int = 128,
+                    read_gap_us: float = 2.0,
+                    write_gap_us: float = 5.0) -> Dict:
+    """Open-loop fenced lookups + a concurrent writer across one live
+    shard migration; sequential-oracle + torn-read accounting."""
+    from repro.dkv import DkvClient, DkvService
+
+    cluster, mem = _mk(2, 2)
+    env = cluster.env
+    svc = DkvService(cluster, mem[:1], n_shards=2, n_buckets=n_buckets)
+    key = 7
+    sid = svc.shard_of(key)
+    for k in range(1, 33):
+        svc.seed(k, _enc(0))
+
+    puts: List = []          # (t_inv, t_resp, seq)
+    reads: List = []         # (t_inv, t_resp, seq, torn, phase)
+    state = {"stop": False, "mig": None, "win": (0.0, 0.0)}
+
+    def writer():
+        cl = DkvClient(cluster.module("n1"))
+        yield from cl.bootstrap()
+        seq = 0
+        while not state["stop"]:
+            seq += 1
+            t0 = env.now
+            yield from cl.put(key, _enc(seq))
+            puts.append((t0, env.now, seq))
+            yield env.timeout(write_gap_us)
+
+    def mover():
+        while len(reads) < n_reads // 3:
+            yield env.timeout(5.0)
+        dst = mem[1]
+        t0 = env.now
+        rep = yield from svc.migrate(cluster.module("n1"), sid, dst)
+        state["mig"] = rep
+        state["win"] = (t0, env.now)
+
+    def reader():
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        mig_proc = env.process(mover(), "mover")
+        for _ in range(n_reads):
+            t0 = env.now
+            raw = yield from cl.get(key)
+            seq, torn = _dec(raw)
+            reads.append((t0, env.now, seq, torn))
+            yield env.timeout(read_gap_us)
+        state["stop"] = True
+        yield mig_proc
+        return cl.stat_redirects
+
+    def scenario():
+        wp = env.process(writer(), "writer")
+        redirects = yield from reader()
+        yield wp
+        return redirects
+
+    redirects = env.run_process(scenario(), "mig-bench")
+
+    lo, hi = state["win"]
+    torn = sum(1 for r in reads if r[3])
+    bad = 0
+    for t0, t1, seq, _torn in reads:
+        floor = max([s for (_i, pr, s) in puts if pr <= t0], default=0)
+        ceil = max([s for (pi, _r, s) in puts if pi <= t1], default=0)
+        if not (floor <= seq <= ceil):
+            bad += 1
+    phases = {"before": [], "during": [], "after": []}
+    for t0, t1, _s, _t in reads:
+        ph = "before" if t1 < lo else ("during" if t0 <= hi else "after")
+        phases[ph].append(t1 - t0)
+
+    def pct(xs, q):
+        return round(float(np.percentile(np.array(xs), q)), 3) if xs \
+            else None
+
+    rep = state["mig"]
+    return {
+        "n_reads": len(reads), "n_puts": len(puts),
+        "torn_reads": torn, "oracle_violations": bad,
+        "reads_during_migration": len(phases["during"]),
+        "client_redirects": redirects,
+        "p50_before_us": pct(phases["before"], 50),
+        "p99_before_us": pct(phases["before"], 99),
+        "p50_during_us": pct(phases["during"], 50),
+        "p99_during_us": pct(phases["during"], 99),
+        "p50_after_us": pct(phases["after"], 50),
+        "p99_after_us": pct(phases["after"], 99),
+        "migration": None if rep is None else {
+            "copy_rounds": rep.copy_rounds,
+            "table_bytes": rep.table_bytes,
+            "freeze_us": round(rep.freeze_us, 2),
+            "total_us": round(rep.total_us, 2),
+        },
+    }
+
+
+# ----------------------------------------------------- suite: autoscaler
+def bench_autoscaler(duration_us: float = 60_000.0,
+                     base_rate: float = 120.0, spike_rate: float = 1_500.0,
+                     work_us: float = 1_500.0, n_shards: int = 2,
+                     max_workers: int = 8) -> Dict:
+    """Spike recovery with worker-pull scaling: the scale-out path pays
+    each worker's REAL bootstrap, so recovery time is control-plane
+    bound for verbs and fork-bound for KRCORE."""
+    from repro.dkv import (DkvClient, DkvService, PullQueue,
+                           WorkerPullAutoscaler)
+    from repro.serverless import spike_trace
+
+    spike_start = duration_us * 0.3
+    spike_len = duration_us * 0.25
+    out: Dict = {"work_us": work_us, "n_shards": n_shards,
+                 "spike_window_us": [spike_start, spike_start + spike_len]}
+    for kind in ("krcore", "verbs"):
+        cluster, mem = _mk(3, 2)
+        env = cluster.env
+        cm = cluster.fabric.cm
+        svc = DkvService(cluster, mem, n_shards=n_shards, n_buckets=128)
+        for k in range(1, 65):
+            svc.seed(k, bytes([k % 250 + 1]))
+        arrivals = spike_trace(base_rate, spike_rate, duration_us,
+                               spike_start, spike_len, seed=11)
+        rng = np.random.RandomState(5)
+        keys = 1 + rng.randint(0, 64, size=len(arrivals))
+        queues = [PullQueue(env, f"shard{s}") for s in range(n_shards)]
+        homes = [f"n{i}" for i in range(3)]
+        rr = {"i": 0}
+
+        def spawn(queue):
+            home = homes[rr["i"] % len(homes)]
+            rr["i"] += 1
+            yield env.timeout(cm.fork_worker_us)       # worker process fork
+            if kind == "krcore":
+                cl = DkvClient(cluster.module(home))
+                yield from cl.bootstrap()
+
+                def serve(key):
+                    v = yield from cl.get(int(key))
+                    assert v is not None
+                    yield env.timeout(work_us)
+            else:
+                proc, mr = yield from _verbs_attach(cluster, svc, home)
+
+                def serve(key):
+                    v = yield from _verbs_get(cluster, svc, proc, mr,
+                                              int(key))
+                    assert v is not None
+                    yield env.timeout(work_us)
+            return serve
+
+        scaler = WorkerPullAutoscaler(
+            env, queues, spawn, min_workers=1, max_workers=max_workers,
+            target_pressure=2, check_period_us=1_000.0).start()
+
+        def admit():
+            base = env.now
+            for t, key in zip(arrivals, keys):
+                when = base + float(t)
+                if when > env.now:
+                    yield env.timeout(when - env.now)
+                queues[svc.shard_of(int(key))].put(int(key))
+            last_arrival = env.now
+            while not all(q.done for q in queues):
+                yield env.timeout(500.0)
+            scaler.stop()
+            scaler.stop_workers()
+            return env.now - last_arrival
+
+        drain_lag = env.run_process(admit(), f"autoscale.{kind}")
+        s = scaler.summary()
+        out[f"{kind}_served"] = s["served"]
+        out[f"{kind}_enqueued"] = s["enqueued"]
+        out[f"{kind}_workers_peak"] = s["workers_peak"]
+        out[f"{kind}_spawns"] = s["spawns"]
+        out[f"{kind}_wait_p99_us"] = round(s["wait_p99_us"], 1)
+        out[f"{kind}_drain_lag_us"] = round(float(drain_lag), 1)
+    out["arrivals"] = int(len(arrivals))
+    out["recovery_reduction_vs_verbs"] = round(
+        1.0 - out["krcore_drain_lag_us"] / out["verbs_drain_lag_us"], 4)
+    out["wait_p99_reduction_vs_verbs"] = round(
+        1.0 - out["krcore_wait_p99_us"] / max(out["verbs_wait_p99_us"],
+                                              1e-9), 4)
+    return out
+
+
+# ------------------------------------------------------------ gates/suite
+def check_gates(results: Dict) -> List[str]:
+    """Regression gates; explicit strings (survive python -O)."""
+    bad: List[str] = []
+    bs = results["bootstrap"]
+    if bs["attach_reduction_vs_verbs"] < 0.80:
+        bad.append(f"bootstrap attach reduction "
+                   f"{100 * bs['attach_reduction_vs_verbs']:.1f}% below "
+                   f"the 80% gate (paper: 83%): {bs}")
+    mig = results["migration"]
+    if mig["torn_reads"] != 0:
+        bad.append(f"torn reads across live migration: {mig}")
+    if mig["oracle_violations"] != 0:
+        bad.append(f"lookups diverged from the sequential oracle: {mig}")
+    if mig["reads_during_migration"] < 1:
+        bad.append(f"no lookup actually overlapped the migration: {mig}")
+    if mig["migration"] is None:
+        bad.append("migration never ran")
+    sc = results["autoscaler"]
+    for kind in ("krcore", "verbs"):
+        if sc[f"{kind}_served"] != sc[f"{kind}_enqueued"]:
+            bad.append(f"autoscaler ({kind}) dropped requests: {sc}")
+    # recovery gate rides queue-wait p99, not drain lag: once both fleets
+    # catch up before the trace ends, drain lag collapses to the polling
+    # quantum for both — the spike's pain lives in the wait tail
+    if sc["wait_p99_reduction_vs_verbs"] < 0.2:
+        bad.append(f"spike wait-p99 reduction "
+                   f"{100 * sc['wait_p99_reduction_vs_verbs']:.1f}% below "
+                   f"the 20% gate: {sc}")
+    return bad
+
+
+def run_suite(smoke: bool = False) -> Dict:
+    if smoke:
+        bootstrap = bench_bootstrap(n_workers=6, n_shards=4, n_buckets=64)
+        migration = bench_migration(n_reads=60, n_buckets=64)
+        autoscaler = bench_autoscaler(duration_us=40_000.0,
+                                      spike_rate=1_200.0,
+                                      work_us=1_200.0, max_workers=6)
+    else:
+        bootstrap = bench_bootstrap(n_workers=24, n_compute=4, n_mem=3,
+                                    n_shards=8, n_buckets=256)
+        migration = bench_migration(n_reads=240, n_buckets=256)
+        autoscaler = bench_autoscaler()
+    return {"bootstrap": bootstrap, "migration": migration,
+            "autoscaler": autoscaler}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON (default: {DEFAULT_OUT}; smoke "
+                         f"runs write a separate _smoke file)")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = DEFAULT_OUT.replace(".json", "_smoke.json") \
+            if args.smoke else DEFAULT_OUT
+    results = run_suite(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    bs = results["bootstrap"]
+    print(f"bootstrap: krcore attach {bs['krcore_attach_mean_us']}us vs "
+          f"verbs {bs['verbs_attach_mean_us']}us "
+          f"(-{100 * bs['attach_reduction_vs_verbs']:.1f}%, paper: 83%); "
+          f"fleet {bs['krcore_fleet_ready_us']}us vs "
+          f"{bs['verbs_fleet_ready_us']}us")
+    mig = results["migration"]
+    print(f"migration: p99 before/during/after = {mig['p99_before_us']}/"
+          f"{mig['p99_during_us']}/{mig['p99_after_us']}us, "
+          f"{mig['reads_during_migration']} reads in-flight, "
+          f"torn={mig['torn_reads']} oracle_bad={mig['oracle_violations']}")
+    sc = results["autoscaler"]
+    print(f"autoscaler: wait p99 krcore {sc['krcore_wait_p99_us']}us vs "
+          f"verbs {sc['verbs_wait_p99_us']}us "
+          f"(-{100 * sc['wait_p99_reduction_vs_verbs']:.1f}%), workers "
+          f"peak {sc['krcore_workers_peak']}/{sc['verbs_workers_peak']}, "
+          f"drain lag {sc['krcore_drain_lag_us']}/"
+          f"{sc['verbs_drain_lag_us']}us")
+    print(f"wrote {args.out}")
+    bad = check_gates(results)
+    if bad:
+        raise SystemExit("; ".join(bad))
+
+
+if __name__ == "__main__":
+    main()

@@ -629,8 +629,42 @@ def bench_serverless() -> List[Row]:
     return rows
 
 
+# ================================================ elastic dkv subsystem
+def bench_elastic_kv() -> List[Row]:
+    """Fig 10/11 analogues through the dkv subsystem (src/repro/dkv):
+    sharded-store worker bootstrap vs the verbs cold-connect baseline,
+    fenced lookup latency across a live shard migration, and worker-pull
+    spike recovery. Full sweep + JSON artifact:
+    ``python -m benchmarks.elastic_kv``."""
+    from benchmarks.elastic_kv import (bench_autoscaler, bench_bootstrap,
+                                       bench_migration)
+
+    rows: List[Row] = []
+    bs = bench_bootstrap(n_workers=8, n_shards=4, n_buckets=128)
+    rows.append(("fig10x/dkv_worker_attach", bs["krcore_attach_mean_us"],
+                 f"verbs={bs['verbs_attach_mean_us']}us reduction="
+                 f"{100 * bs['attach_reduction_vs_verbs']:.1f}% "
+                 f"(paper: 83%)"))
+    rows.append(("fig10x/dkv_fleet_ready", bs["krcore_fleet_ready_us"],
+                 f"verbs={bs['verbs_fleet_ready_us']}us "
+                 f"(fork-bound vs control-plane-bound)"))
+    mig = bench_migration(n_reads=80, n_buckets=128)
+    rows.append(("fig11x/dkv_migration_lookup_p99",
+                 mig["p99_during_us"],
+                 f"before={mig['p99_before_us']}us "
+                 f"after={mig['p99_after_us']}us torn={mig['torn_reads']} "
+                 f"inflight={mig['reads_during_migration']}"))
+    sc = bench_autoscaler(duration_us=40_000.0, spike_rate=1_200.0,
+                          work_us=1_200.0, max_workers=6)
+    rows.append(("fig11x/dkv_spike_recovery", sc["krcore_wait_p99_us"],
+                 f"verbs_wait_p99={sc['verbs_wait_p99_us']}us reduction="
+                 f"{100 * sc['wait_p99_reduction_vs_verbs']:.1f}% "
+                 f"workers={sc['krcore_workers_peak']}"))
+    return rows
+
+
 ALL_BENCHES = [
     bench_table2, bench_fig3, bench_fig8, bench_fig9a, bench_fig10,
     bench_fig11_9b, bench_fig12a, bench_fig12b, bench_fig13, bench_fig14,
-    bench_batched, bench_serverless,
+    bench_batched, bench_serverless, bench_elastic_kv,
 ]

@@ -90,6 +90,28 @@ def _smoke() -> None:
     print(f"smoke/serverless_response_spike_p999,"
           f"{rp['spike_window']['p999_us']},"
           f"closed_loop_p99={rp['p99_us']}us")
+
+    # elastic dkv: bootstrap >= 80% reduction, zero torn reads across a
+    # live migration, worker-pull spike recovery
+    from benchmarks.elastic_kv import check_gates as ek_gates
+    from benchmarks.elastic_kv import run_suite as ek_suite
+
+    ek = ek_suite(smoke=True)
+    bad = ek_gates(ek)
+    if bad:
+        raise SystemExit("; ".join(bad))
+    bs = ek["bootstrap"]
+    print(f"smoke/elastic_kv_bootstrap,{bs['krcore_attach_mean_us']},"
+          f"reduction={100 * bs['attach_reduction_vs_verbs']:.1f}%_vs_"
+          f"verbs_{bs['verbs_attach_mean_us']}us")
+    mig = ek["migration"]
+    print(f"smoke/elastic_kv_migration_p99,{mig['p99_during_us']},"
+          f"torn={mig['torn_reads']}_oracle_bad={mig['oracle_violations']}"
+          f"_inflight={mig['reads_during_migration']}")
+    sc = ek["autoscaler"]
+    print(f"smoke/elastic_kv_autoscaler,{sc['krcore_wait_p99_us']},"
+          f"wait_p99_reduction={100 * sc['wait_p99_reduction_vs_verbs']:.1f}"
+          f"%_workers={sc['krcore_workers_peak']}")
     print("SMOKE_OK")
 
 

@@ -1,0 +1,68 @@
+"""Elastic disaggregated KV: microsecond worker bootstrap + a live
+shard migration under traffic (paper §6, Fig 10/11).
+
+    PYTHONPATH=src python examples/elastic_kv.py
+
+A spike spawns 8 fresh compute workers that attach to a 4-shard store
+spread over two memory nodes: one batched directory doorbell + a
+microsecond connect per node each. Then shard 0 migrates between memory
+nodes WHILE a worker keeps reading — every read stays correct, the
+client redirects through the MOVED tombstone and converges on the new
+owner.
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import make_cluster
+from repro.dkv import DkvClient, DkvService
+
+cluster = make_cluster(n_nodes=4, n_meta=1)     # n0/n1 compute, n2/n3 mem
+env = cluster.env
+svc = DkvService(cluster, ["n2", "n3"], n_shards=4, n_buckets=256)
+for k in range(1, 101):
+    svc.seed(k, bytes([k % 250 + 1]))
+
+attach_us = []
+
+
+def worker(i):
+    cl = DkvClient(cluster.module(f"n{i % 2}"))
+    us = yield from cl.bootstrap()
+    attach_us.append(us)
+    v = yield from cl.get(1 + i % 100)
+    assert v == bytes([(1 + i % 100) % 250 + 1])
+    return cl
+
+
+def scenario():
+    clients = []
+    for i in range(8):
+        clients.append((yield from worker(i)))
+
+    # live migration under read traffic
+    cl = clients[0]
+    sid = svc.shard_of(7)
+    src, dst = svc.owner(sid), ("n3" if svc.owner(sid) == "n2" else "n2")
+    mig = env.process(svc.migrate(cluster.module("n1"), sid, dst), "mig")
+    reads = 0
+    while not mig.triggered:
+        v = yield from cl.get(7)
+        assert v == bytes([7 % 250 + 1])
+        reads += 1
+        yield env.timeout(2.0)
+    rep = mig.value
+    v = yield from cl.get(7)
+    assert v == bytes([7 % 250 + 1])
+    return src, dst, rep, reads, cl.stat_redirects
+
+
+src, dst, rep, reads, redirects = env.run_process(scenario(), "main")
+mean_us = sum(attach_us) / len(attach_us)
+print(f"8 workers attached to 4 shards / 2 memory nodes: "
+      f"{mean_us:.1f} us each (verbs cold-connect: ~24,000 us)")
+print(f"live migration shard {rep.shard_id}: {src} -> {dst} in "
+      f"{rep.total_us:.1f} us ({rep.copy_rounds} copy pass(es), "
+      f"{rep.table_bytes} B, frozen {rep.freeze_us:.1f} us)")
+print(f"reads during migration: {reads}, redirects absorbed: {redirects}, "
+      f"zero wrong or torn values")

@@ -26,7 +26,7 @@ from .fabric import Fabric, MemoryRegion, MRError, Node
 from .qp import (QP, Completion, QPError, QPState, QPType, RecvBuffer,
                  WorkRequest, connect_rc_pair)
 from .meta import (DCCache, DCTMeta, DrTMKV, KVClient, MetaServer, MRStore,
-                   ValidMRStore)
+                   ShardRecord, ValidMRStore)
 from .pool import HybridQPPool
 from .virtqueue import (CompEntry, PolledMsg, VirtQueue, decode_wr_id,
                         encode_wr_id)
@@ -43,7 +43,8 @@ __all__ = [
     "Resource", "Store", "Fabric", "MemoryRegion", "MRError", "Node", "QP",
     "Completion", "QPError", "QPState", "QPType", "RecvBuffer",
     "WorkRequest", "connect_rc_pair", "DCCache", "DCTMeta", "DrTMKV",
-    "KVClient", "MetaServer", "MRStore", "ValidMRStore", "HybridQPPool",
+    "KVClient", "MetaServer", "MRStore", "ShardRecord", "ValidMRStore",
+    "HybridQPPool",
     "CompEntry", "PolledMsg", "VirtQueue", "decode_wr_id", "encode_wr_id",
     "KRCoreError", "KRCoreModule", "install", "BatchPlan", "plan_batch",
     "BufferPool", "CallTimeout", "Cancelled", "Future", "Lease", "Listener",

@@ -219,6 +219,39 @@ class DCTMeta:
         return DCTMeta(a, b, c)
 
 
+_SHARD_REC = struct.Struct("<IIIII")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRecord:
+    """One dkv shard-directory record: everything a compute worker needs
+    to reach a shard with pure one-sided ops — the DCTMeta analogue for
+    disaggregated KV shards. Exactly 20 bytes, so a record fills a
+    DrTM-KV slot's value (``MAX_VAL``) and resolves with ONE one-sided
+    READ like every other meta-service lookup.
+
+    ``epoch`` is the shard-map epoch this record was published under
+    (bumped by every migration of this shard); ``ctl_rkey`` names the
+    shard's control MR (table version u64 at offset 0, state word u64 at
+    offset :data:`repro.kvs.race.STATE_OFF`)."""
+    epoch: int
+    node_id: int
+    table_rkey: int
+    ctl_rkey: int
+    n_buckets: int
+
+    def pack(self) -> bytes:
+        return _SHARD_REC.pack(self.epoch, self.node_id, self.table_rkey,
+                               self.ctl_rkey, self.n_buckets)
+
+    @staticmethod
+    def unpack(raw: bytes) -> "ShardRecord":
+        return ShardRecord(*_SHARD_REC.unpack_from(bytes(raw), 0))
+
+
+assert _SHARD_REC.size == MAX_VAL, "ShardRecord must fill a DrTM-KV slot"
+
+
 class MetaServer:
     """A global meta server: DrTM-KV mapping node name -> DCTMeta."""
 

@@ -74,6 +74,11 @@ class KRCoreModule:
         # (src, src_vq, listener_vq) -> reply qd (accept-semantics cache)
         self._reply_qds: Dict[Tuple[str, int, int], int] = {}
         self._promotions_inflight: set = set()
+        #: callables invoked (with the dead peer's name) at the END of
+        #: on_node_death — lets application-level caches keyed by node
+        #: (e.g. the dkv shard-directory cache) invalidate in lockstep
+        #: with the kernel's own DCCache/MRStore/RC-pool invalidation
+        self._death_hooks: List = []
         self.booted = False
         # stats
         self.stat_promotions = 0
@@ -1033,6 +1038,22 @@ class KRCoreModule:
         # at creation; drop them so a restarted peer gets fresh reply vqs
         for key in [k for k in self._reply_qds if k[0] == addr]:
             self.vqs.pop(self._reply_qds.pop(key), None)
+        for hook in list(self._death_hooks):
+            hook(addr)
+
+    def add_death_hook(self, hook) -> None:
+        """Register ``hook(addr)`` to run whenever :meth:`on_node_death`
+        fires — application caches keyed by node invalidate here."""
+        self._death_hooks.append(hook)
+
+    def meta_client(self) -> Optional[KVClient]:
+        """The first live pre-connected meta-server KV client (boot-time
+        raw-QP session, §4.2) — the one-sided lookup path applications
+        like the dkv shard directory ride for metadata resolution."""
+        for client in self._meta_clients:
+            if client.server.node.alive:
+                return client
+        return None
 
     # ========================================================== accounting
     def memory_bytes(self) -> int:

@@ -594,6 +594,10 @@ class Message:
         m = dict(meta or {})
         if "call_id" in self.hdr:
             m["reply_to"] = self.hdr["call_id"]
+        if "sess_epoch" in self.hdr:
+            # epoch handshake: echo the REQUEST's incarnation epoch so
+            # the caller can drop replies meant for a previous life
+            m["reply_epoch"] = self.hdr["sess_epoch"]
         fut = sess.send(data, meta=m)
         return (yield from fut.wait())
 
@@ -609,6 +613,7 @@ class _RecvWindow:
         self.msg_bytes = msg_bytes
         self.window = window
         self.slots: Dict[int, Lease] = {}
+        self.closed = False
         self._next_id = itertools.count(1)
         #: slots posted at a pre-resize (smaller) size, awaiting lazy
         #: retirement: a posted recv is hardware-owned and cannot be
@@ -639,9 +644,18 @@ class _RecvWindow:
 
     def ensure(self, push_recv) -> Generator:
         """Post leases until ``window`` slots stand; ``push_recv(mr, off,
-        length, wr_id)`` is the transport's recv-post generator."""
-        while len(self.slots) < self.window:
+        length, wr_id)`` is the transport's recv-post generator.
+
+        The ``closed`` re-checks matter: an ensure generator in flight
+        when the owning session closes (the reactor posts its window
+        concurrently with a flush) must NOT resurrect the drained window
+        — it would repost slots from a released pool under a successor
+        session's live window on the same qd (crash-restart aliasing)."""
+        while not self.closed and len(self.slots) < self.window:
             lease = yield from self.pool.lease(self.msg_bytes)
+            if self.closed:
+                lease.release()
+                return
             wr_id = next(self._next_id)
             self.slots[wr_id] = lease
             yield from push_recv(lease.mr, lease.off, lease.nbytes, wr_id)
@@ -668,6 +682,7 @@ class _RecvWindow:
         yield from push_recv(lease.mr, lease.off, lease.nbytes, wr_id)
 
     def close(self) -> None:
+        self.closed = True
         for lease in self.slots.values():
             lease.release()
         self.slots.clear()
@@ -718,11 +733,22 @@ class Session:
 
     _ids = itertools.count(1)
     _call_ids = itertools.count(1)
+    #: incarnation epochs: every Session draws a fresh one, carried in
+    #: every SEND header (``sess_epoch``) and echoed back by the peer on
+    #: replies (``reply_epoch``) — the listener-side epoch handshake of
+    #: the paper's lease story. A crash-restarted client that reuses a
+    #: session id (same qd / same call-id space) gets a HIGHER epoch, so
+    #: replies addressed to the previous incarnation are dropped instead
+    #: of resolving the reincarnated call, and the listener stops serving
+    #: the dead incarnation's late requests.
+    _epochs = itertools.count(1)
 
     def __init__(self, transport, pool: BufferPool,
                  signal_interval: Optional[int] = None,
-                 poll_us: float = 0.2, spin_limit: int = 200_000):
+                 poll_us: float = 0.2, spin_limit: int = 200_000,
+                 epoch: Optional[int] = None):
         self.id = next(Session._ids)
+        self.epoch = next(Session._epochs) if epoch is None else epoch
         self._t = transport
         self.pool = pool
         self.env = transport.env
@@ -934,6 +960,18 @@ class Session:
         while self._recv_waiters:
             self._recv_waiters.popleft()._fail("session closed")
         if self._window is not None:
+            # unpost this window's still-queued recv slots BEFORE the
+            # leases release: a message delivered after close would land
+            # in freed pool bytes, and a successor session on the same qd
+            # (crash-restart) would alias its window wr_ids against the
+            # dead incarnation's stale entries
+            vq = self._t.vq
+            if vq is not None:
+                mine = {(id(l.mr), l.off)
+                        for l in self._window.slots.values()}
+                vq.recv_queue = deque(
+                    e for e in vq.recv_queue
+                    if (id(e.mr), e.offset) not in mine)
             self._window.close()
             self._window = None
         for lease in self._held:
@@ -1160,6 +1198,7 @@ class Session:
             cm = self._t.cm
             op.hold_lease = op.nbytes > cm.kernel_msg_buf_bytes
             meta = dict(op.meta or {})
+            meta["sess_epoch"] = self.epoch
             if op.call_id is not None:
                 meta["call_id"] = op.call_id
             return WorkRequest(op="SEND", wr_id=idx, local_mr=op.lease.mr,
@@ -1411,6 +1450,17 @@ class Session:
         if self.module is not None:
             msg._owner = _SessionReplyHub.for_module(self.module, self.pool)
         reply_to = hdr.get("reply_to")
+        rep_epoch = hdr.get("reply_epoch")
+        if rep_epoch is not None and rep_epoch != self.epoch:
+            # epoch handshake: this reply answers a request sent by a
+            # PREVIOUS incarnation of this endpoint (crash-restart that
+            # reused the session id / qd). Its call-id space aliases
+            # ours, so the per-call registry alone cannot tell it apart
+            # — the epoch can. Drop it.
+            self.stat_stale_replies += 1
+            _LOG.debug("session %d: dropped reply for stale epoch %s "
+                       "(ours %s)", self.id, rep_epoch, self.epoch)
+            return
         if reply_to is not None:
             fut = self._calls.pop(reply_to, None)
             if fut is not None:
@@ -1475,6 +1525,13 @@ class Listener:
         vq = module.vqs[qd]
         vq.msg_notify = self._notify
         self._hub = _SessionReplyHub.for_module(module, pool)
+        #: epoch handshake (paper's lease story): highest incarnation
+        #: epoch seen per (src, src_vq). A request carrying a LOWER epoch
+        #: comes from a crashed previous incarnation of that endpoint and
+        #: is dropped unserved — serving it would emit a reply that races
+        #: the restarted client's identically-numbered calls.
+        self._peer_epochs: Dict[Tuple[str, int], int] = {}
+        self.stat_stale_msgs = 0
         self.closed = False
 
     @property
@@ -1499,23 +1556,39 @@ class Listener:
 
     def recv(self, max_n: Optional[int] = None,
              wait: bool = True) -> Generator:
-        """Drain received messages (>= 1 when ``wait``); event-driven."""
+        """Drain received messages (>= 1 when ``wait``); event-driven.
+
+        Messages from a stale incarnation (a sender epoch LOWER than the
+        highest seen for that endpoint — see the epoch handshake) are
+        dropped unserved; their window slots recycle normally."""
         yield from self._ensure_window()
+        out: List[Message] = []
         while True:
             polled = yield from self.module.sys_qpop_msgs(self.qd,
                                                           max_n=max_n)
-            if polled or not wait:
+            for m in polled:
+                hdr = dict(m.hdr or {})
+                ep = hdr.get("sess_epoch")
+                if ep is not None:
+                    key = (m.src, m.src_vq)
+                    cur = self._peer_epochs.get(key, 0)
+                    if ep < cur:
+                        # stale incarnation: drop, recycle the slot
+                        self.stat_stale_msgs += 1
+                        yield from self._window.recycle(m.wr_id,
+                                                        self._push_recv)
+                        continue
+                    self._peer_epochs[key] = ep
+                out.append(Message(
+                    payload=self._window.take_payload(m.wr_id, m.byte_len),
+                    src=m.src, src_vq=m.src_vq, hdr=hdr,
+                    reply_qd=m.reply_qd, _owner=self))
+                yield from self._window.recycle(m.wr_id, self._push_recv)
+            if out or not wait:
                 break
             yield self._notify.get()
             while len(self._notify):          # collapse burst notifies
                 yield self._notify.get()
-        out: List[Message] = []
-        for m in polled:
-            out.append(Message(
-                payload=self._window.take_payload(m.wr_id, m.byte_len),
-                src=m.src, src_vq=m.src_vq, hdr=dict(m.hdr or {}),
-                reply_qd=m.reply_qd, _owner=self))
-            yield from self._window.recycle(m.wr_id, self._push_recv)
         return out
 
     def recv_n(self, n: int) -> Generator:
@@ -1534,6 +1607,12 @@ class Listener:
         vq = self.module.vqs.get(self.qd)
         if vq is not None:
             vq.msg_notify = None
+            # unpost our still-queued recv slots (see Session.close)
+            mine = {(id(l.mr), l.off)
+                    for l in self._window.slots.values()}
+            vq.recv_queue = deque(
+                e for e in vq.recv_queue
+                if (id(e.mr), e.offset) not in mine)
         self._window.close()
 
 
@@ -1544,7 +1623,12 @@ def connect(module, addr: str, port: Optional[int] = None,
             signal_interval: Optional[int] = None,
             pool_bytes: int = 64 * 1024, cpu: int = 0) -> Generator:
     """``Session = krcore.connect(addr)``: queue + qconnect + a session
-    with a fresh buffer pool. Microsecond control path (Table 2)."""
+    with a fresh buffer pool. Microsecond control path (Table 2).
+
+    Every connect draws a fresh incarnation epoch (``session.epoch``),
+    piggybacked on every SEND and echoed on replies — the listener-side
+    epoch handshake that makes a crash-restarted client reusing a
+    session id safe against its predecessor's stale replies."""
     qd = yield from module.sys_queue(cpu=cpu)
     rc = yield from module.sys_qconnect(qd, addr, port=port)
     if rc != 0:

@@ -6,8 +6,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .race_lookup import race_lookup_pallas, race_lookup_pallas_tiled
+from .race_lookup import (race_lookup_pallas, race_lookup_pallas_sharded,
+                          race_lookup_pallas_tiled)
 from .ref import race_lookup_ref
 
 #: tables above this are too big to pin VMEM-resident for the tiled
@@ -51,3 +53,53 @@ def race_lookup(fp_table, val_table, queries, bucket_idx,
     return race_lookup_pallas_tiled(fp_table, val_table, queries,
                                     bucket_idx, qblock=qblock,
                                     interpret=interpret)
+
+
+def race_lookup_sharded(fp_tables, val_tables, queries, bucket_idx,
+                        shard_idx, impl: str = "pallas",
+                        interpret: bool = True, qblock: int = 64):
+    """Batched lookup over a SHARDED table set (the dkv shard map).
+
+    fp_tables (NS, NB, NSLOT) i32, val_tables (NS, NB, NSLOT, VDIM),
+    queries (NQ,) i32 fingerprints, bucket_idx (NQ, 2) i32 intra-shard
+    rows, shard_idx (NQ,) i32 -> (values (NQ, VDIM), found (NQ,) i32).
+
+    ``impl``:
+      * ``"pallas"`` — the sharded tiled kernel: grid dimension over
+        shards with a per-shard index map, ONE shard's table VMEM-
+        resident per step (no all-shards residency bound),
+      * ``"pallas_scalar"`` — the scalar fallback, kept: per-shard calls
+        into the one-query-per-step kernel (per-bucket DMA, no VMEM
+        table-size bound at all),
+      * ``"ref"`` — per-shard pure-jnp oracle.
+
+    Not jit-wrapped: the per-shard grouping/scatter is data-dependent
+    (the inner pallas_call still executes the kernel body).
+    """
+    if impl == "pallas":
+        return race_lookup_pallas_sharded(fp_tables, val_tables, queries,
+                                          bucket_idx, shard_idx,
+                                          qblock=qblock,
+                                          interpret=interpret)
+    if impl not in ("pallas_scalar", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
+    q = np.asarray(queries, np.int32)
+    b = np.asarray(bucket_idx, np.int32)
+    s = np.asarray(shard_idx, np.int64)
+    nq = q.shape[0]
+    vdim = val_tables.shape[-1]
+    out_v = np.zeros((nq, vdim), val_tables.dtype)
+    out_f = np.zeros(nq, np.int32)
+    for sid in np.unique(s):
+        m = s == sid
+        if impl == "ref":
+            v, f = race_lookup_ref(fp_tables[sid], val_tables[sid],
+                                   jnp.asarray(q[m]), jnp.asarray(b[m]))
+        else:
+            v, f = race_lookup_pallas(fp_tables[sid], val_tables[sid],
+                                      jnp.asarray(q[m]),
+                                      jnp.asarray(b[m]),
+                                      interpret=interpret)
+        out_v[m] = np.asarray(v)
+        out_f[m] = np.asarray(f)
+    return jnp.asarray(out_v), jnp.asarray(out_f)

@@ -32,6 +32,17 @@ Two kernels live here:
     fallback and as the baseline the batched_lookup benchmark measures
     against. Its scalar-prefetch BlockSpecs DMA exactly the two candidate
     buckets per step, so it has no VMEM table-size bound.
+
+``race_lookup_pallas_sharded`` (the dkv shard map)
+    The sharded sibling of the tiled kernel: per-shard tables stacked as
+    ``(NS, NB, NSLOT)`` / ``(NS, NB, NSLOT, VDIM)`` and a **per-shard
+    index map** — the grid gains a leading shard dimension and each grid
+    step's BlockSpec selects ONLY that shard's table, so VMEM holds one
+    shard at a time instead of pinning the whole multi-shard array with a
+    constant index map. Queries are grouped per shard host-side (stable
+    sort), padded to the tile size, and scattered back to input order
+    after the call. The minor grid dimension iterates tiles within a
+    shard, so consecutive steps reuse the resident shard block.
 """
 
 from __future__ import annotations
@@ -40,6 +51,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -104,20 +116,21 @@ def race_lookup_pallas(fp_table, val_table, queries, bucket_idx,
 
 
 # -------------------------------------------------------- tiled fast path
-def _lookup_kernel_tiled(query_ref, bidx_ref, fp_ref, val_ref,
-                         out_ref, found_ref, *, qblock, nslot, vdim):
-    """QBLOCK queries per grid step.
+def _tile_select(q, rows, fp, val, *, qblock, nslot, vdim):
+    """Shared tile body of the tiled and sharded kernels.
 
-    Gather the tile's 2*QBLOCK candidate buckets from the VMEM-resident
-    tables, compare fingerprints across the whole (QBLOCK, 2*NSLOT) tile
+    Gather the tile's 2*QBLOCK candidate buckets from the resident
+    table, compare fingerprints across the whole (QBLOCK, 2*NSLOT) tile
     (VPU), then select each query's first-hit value row with ONE flat
     one-hot contraction (QBLOCK, QBLOCK*2*NSLOT) @ (QBLOCK*2*NSLOT, VDIM)
     so the select runs on the MXU instead of per-query.
+
+    ``q`` (QBLOCK, 1) fingerprints, ``rows`` (2*QBLOCK,) bucket rows
+    (per-query contiguous: q0b0, q0b1, q1b0, ...), ``fp`` (NB, NSLOT),
+    ``val`` (NB, NSLOT, VDIM). Returns (out (QBLOCK, VDIM), found
+    (QBLOCK,) bool).
     """
-    q = query_ref[...]                                  # (QBLOCK, 1)
-    # bucket rows of the tile, per-query contiguous: q0b0, q0b1, q1b0, ...
-    rows = bidx_ref[...].reshape(2 * qblock)
-    fps = jnp.take(fp_ref[...], rows, axis=0,
+    fps = jnp.take(fp, rows, axis=0,
                    mode="clip").reshape(qblock, 2 * nslot)
     hit = (fps == q) & (fps != 0)                       # VPU, whole tile
     found = jnp.any(hit, axis=1)                        # (QBLOCK,)
@@ -127,8 +140,8 @@ def _lookup_kernel_tiled(query_ref, bidx_ref, fp_ref, val_ref,
     flat_ids = (rows[:, None] * nslot
                 + jax.lax.broadcasted_iota(jnp.int32, (2 * qblock, nslot),
                                            1)).reshape(2 * qblock * nslot)
-    nb = fp_ref.shape[0]
-    vals = jnp.take(val_ref[...].reshape(nb * nslot, vdim), flat_ids,
+    nb = fp.shape[0]
+    vals = jnp.take(val.reshape(nb * nslot, vdim), flat_ids,
                     axis=0, mode="clip")        # (QBLOCK*2*NSLOT, VDIM)
 
     sel = first + jax.lax.broadcasted_iota(
@@ -136,8 +149,18 @@ def _lookup_kernel_tiled(query_ref, bidx_ref, fp_ref, val_ref,
     onehot = ((jax.lax.broadcasted_iota(
         jnp.int32, (qblock, 2 * qblock * nslot), 1) == sel[:, None])
         & found[:, None]).astype(vals.dtype)
-    out_ref[...] = jax.lax.dot(onehot, vals,
-                               preferred_element_type=vals.dtype)
+    out = jax.lax.dot(onehot, vals, preferred_element_type=vals.dtype)
+    return out, found
+
+
+def _lookup_kernel_tiled(query_ref, bidx_ref, fp_ref, val_ref,
+                         out_ref, found_ref, *, qblock, nslot, vdim):
+    """QBLOCK queries per grid step against the VMEM-resident table."""
+    q = query_ref[...]                                  # (QBLOCK, 1)
+    rows = bidx_ref[...].reshape(2 * qblock)
+    out, found = _tile_select(q, rows, fp_ref[...], val_ref[...],
+                              qblock=qblock, nslot=nslot, vdim=vdim)
+    out_ref[...] = out
     found_ref[...] = found[:, None].astype(jnp.int32)
 
 
@@ -184,3 +207,103 @@ def race_lookup_pallas_tiled(fp_table, val_table, queries, bucket_idx,
         interpret=interpret,
     )(queries.reshape(nq_pad, 1), bucket_idx, fp_table, val_table)
     return values[:nq], found[:nq, 0]
+
+
+# ---------------------------------------------------- sharded fast path
+def _lookup_kernel_sharded(query_ref, bidx_ref, fp_ref, val_ref,
+                           out_ref, found_ref, *, qblock, nslot, vdim):
+    """One (shard, tile) pair per grid step: the BlockSpec index map has
+    already selected shard ``s``'s table, so the body is exactly the
+    tiled kernel's — with a leading singleton shard axis squeezed off."""
+    q = query_ref[0].reshape(qblock, 1)                 # (1, QBLOCK) block
+    rows = bidx_ref[0].reshape(2 * qblock)              # (1, QBLOCK, 2)
+    out, found = _tile_select(q, rows, fp_ref[0], val_ref[0],
+                              qblock=qblock, nslot=nslot, vdim=vdim)
+    out_ref[0] = out
+    found_ref[0] = found.astype(jnp.int32)
+
+
+def race_lookup_pallas_sharded(fp_tables, val_tables, queries, bucket_idx,
+                               shard_idx, *, qblock: int = 64,
+                               interpret: bool = True):
+    """Sharded multi-query lookup (the dkv shard-map kernel).
+
+    ``fp_tables`` (NS, NB, NSLOT) int32; ``val_tables`` (NS, NB, NSLOT,
+    VDIM); ``queries`` (NQ,) int32 fingerprints; ``bucket_idx`` (NQ, 2)
+    int32 *intra-shard* bucket rows; ``shard_idx`` (NQ,) int32 owning
+    shard per query. Returns (values (NQ, VDIM), found (NQ,) int32) in
+    input order.
+
+    Per-shard index map: grid = (NS, QCAP // QBLOCK) with the shard as
+    the MAJOR dimension, and the table BlockSpecs select block ``(s, 0,
+    0)`` — one shard's table resident per step (revisited across that
+    shard's tiles, which are the minor/fast dimension), instead of the
+    tiled kernel's constant index map pinning everything at once. VMEM
+    high-water is one shard's table + one query tile regardless of NS.
+
+    Host-side prep: queries are grouped per shard with a stable sort,
+    padded per shard to a multiple of ``qblock`` with null queries
+    (fingerprint 0 matches nothing), and the outputs scattered back to
+    input order. Not jit-wrapped — the grouping is data-dependent.
+    """
+    ns, nb, nslot = fp_tables.shape
+    vdim = val_tables.shape[-1]
+    q = np.asarray(queries, np.int32)
+    b = np.asarray(bucket_idx, np.int32)
+    s = np.asarray(shard_idx, np.int64)
+    nq = q.shape[0]
+    if nq == 0:
+        return (jnp.zeros((0, vdim), val_tables.dtype),
+                jnp.zeros((0,), jnp.int32))
+    counts = np.bincount(s, minlength=ns)
+    qblock = min(qblock, max(int(counts.max()), 8))
+    qcap = ((int(counts.max()) + qblock - 1) // qblock) * qblock
+    qcap = max(qcap, qblock)
+
+    # group per shard (stable, preserves intra-shard order), pad, track
+    # each slot's original position for the scatter back
+    order = np.argsort(s, kind="stable")
+    ss = s[order]
+    starts = np.concatenate(([0], np.cumsum(counts[:-1])))
+    within = np.arange(nq) - starts[ss]
+    q_g = np.zeros((ns, qcap), np.int32)
+    b_g = np.zeros((ns, qcap, 2), np.int32)
+    pos = np.full((ns, qcap), -1, np.int64)
+    q_g[ss, within] = q[order]
+    b_g[ss, within] = b[order]
+    pos[ss, within] = order
+
+    kernel = functools.partial(_lookup_kernel_sharded, qblock=qblock,
+                               nslot=nslot, vdim=vdim)
+    values, found = pl.pallas_call(
+        kernel,
+        grid=(ns, qcap // qblock),
+        in_specs=[
+            pl.BlockSpec((1, qblock), lambda si, ti: (si, ti)),
+            pl.BlockSpec((1, qblock, 2), lambda si, ti: (si, ti, 0)),
+            # per-shard index map: ONLY shard si's table this step
+            pl.BlockSpec((1, nb, nslot), lambda si, ti: (si, 0, 0)),
+            pl.BlockSpec((1, nb, nslot, vdim),
+                         lambda si, ti: (si, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qblock, vdim), lambda si, ti: (si, ti, 0)),
+            pl.BlockSpec((1, qblock), lambda si, ti: (si, ti)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ns, qcap, vdim), val_tables.dtype),
+            jax.ShapeDtypeStruct((ns, qcap), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(q_g), jnp.asarray(b_g), jnp.asarray(fp_tables),
+      jnp.asarray(val_tables))
+
+    # scatter grouped results back to input order
+    vals_g = np.asarray(values)
+    found_g = np.asarray(found)
+    valid = pos >= 0
+    out_v = np.zeros((nq, vdim), vals_g.dtype)
+    out_f = np.zeros(nq, np.int32)
+    out_v[pos[valid]] = vals_g[valid]
+    out_f[pos[valid]] = found_g[valid]
+    return jnp.asarray(out_v), jnp.asarray(out_f)

@@ -18,6 +18,15 @@ Two completion models:
   ``total_us`` is true end-to-end latency including response delivery —
   the Fig 14 analogue measured at the caller.
 
+A third admission mode closes the ROADMAP's Fn-autoscaling open item:
+**worker pull** (:meth:`InvocationGateway.submit_trace_pull`) — arrivals
+land in a per-function :class:`~repro.dkv.autoscaler.PullQueue` instead
+of being pushed at a placed worker, pull workers (one container each)
+drain it, and a :class:`~repro.dkv.autoscaler.WorkerPullAutoscaler`
+grows/shrinks the fleet from queue pressure during spike windows. Each
+scale-out pays the worker's REAL bootstrap (fork + per-transport
+attach), so the control plane's speed is what bounds spike recovery.
+
 Every record decomposes the invocation the way Fig 12a/12b decompose a
 request: queueing, fork (container), control plane (connect + MR), data
 plane (payload movement), compute. The benchmarks aggregate these into the
@@ -28,6 +37,7 @@ the tests pin the open-loop and placement invariants.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Generator, List, Optional, Sequence
 
 import numpy as np
@@ -255,6 +265,79 @@ class InvocationGateway:
         rec.control_us = t.get("control_us", 0.0)
         rec.data_us = t.get("data_us", 0.0)
         rec.compute_us = t.get("compute_us", 0.0)
+
+    # ------------------------------------------------ worker-pull admission
+    def submit_trace_pull(self, fn_name: str, arrivals: Sequence[float],
+                          payload_bytes: int = 1024,
+                          min_workers: int = 1, max_workers: int = 8,
+                          target_pressure: int = 4,
+                          check_period_us: float = 2_000.0) -> Generator:
+        """Worker-pull admission (the Fn autoscaling model): arrivals
+        enqueue into a per-function PullQueue at their trace timestamps;
+        pull workers — each a container leased on a round-robin node —
+        drain it; a WorkerPullAutoscaler spawns workers from queue
+        pressure (each spawn pays container fork on the worker's clock).
+        Returns this trace's records once everything is served; the
+        autoscaler is returned on ``self.last_autoscaler`` for scale-
+        event inspection."""
+        from repro.dkv.autoscaler import PullQueue, WorkerPullAutoscaler
+
+        fn = self.registry.get(fn_name)
+        yield from self._ensure_data_mr()
+        env = self.env
+        base = env.now
+        self.last_trace_base = base
+        queue = PullQueue(env, f"fn.{fn_name}")
+        first_id = self._next_id
+        rr = itertools.count()
+        leased: List[Container] = []
+
+        def spawn(q) -> Generator:
+            node = self.scheduler.nodes[next(rr) % len(self.scheduler.nodes)]
+            # worker bootstrap: a dedicated container (fork + transport
+            # bring-up on the spawn's clock — warm pools only help the
+            # steady state, not a spike's marginal worker)
+            kind, container = yield from self.pool.lease(node, fn)
+            leased.append(container)
+
+            def serve(item) -> Generator:
+                inv_id, arrival_us = item
+                rec = InvocationRecord(inv_id=inv_id, fn=fn.name,
+                                       node=node, kind=kind,
+                                       arrival_us=arrival_us,
+                                       start_us=env.now)
+                if self.data_node is not None and self.data_node != node:
+                    yield from self._fetch_input(container, rec,
+                                                 payload_bytes)
+                t0 = env.now
+                yield env.timeout(fn.compute_us)
+                rec.compute_us = env.now - t0
+                rec.end_us = env.now
+                self.records.append(rec)
+
+            return serve
+
+        scaler = WorkerPullAutoscaler(
+            env, [queue], spawn, min_workers=min_workers,
+            max_workers=max_workers, target_pressure=target_pressure,
+            check_period_us=check_period_us).start()
+        self.last_autoscaler = scaler
+        for t in sorted(float(t) for t in arrivals):
+            when = base + t
+            if when > env.now:
+                yield env.timeout(when - env.now)
+            queue.put((self._next_id, env.now))
+            self._next_id += 1
+        while not queue.done:
+            yield env.timeout(check_period_us / 2)
+        scaler.stop()
+        scaler.stop_workers()
+        # retired workers hand their containers back to the warm pool —
+        # a long-lived gateway serving repeated pull traces must not
+        # strand one leased container per worker per trace
+        for container in leased:
+            self.pool.release(container)
+        return [r for r in self.records if r.inv_id >= first_id]
 
     def _serve_worker(self, node: str, listener: Listener) -> Generator:
         """Worker-side serve loop (event-driven; lives for the run)."""

@@ -1,0 +1,441 @@
+"""Elastic dkv subsystem invariants: directory resolution + caching,
+microsecond worker bootstrap (one batched directory doorbell), cache
+invalidation on node death AND shard-map epoch bumps (a stale cached
+route never serves a lookup), live-resharding linearizability against a
+sequential oracle (zero torn reads), and the worker-pull autoscaler."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import make_cluster
+from repro.dkv import (DirCache, DkvClient, DkvError, DkvService,
+                       PullQueue, WorkerPullAutoscaler)
+from repro.kvs.race import (STATE_MOVED, STATE_SERVING, parse_state,
+                            shard_of_key)
+
+_VAL = struct.Struct("<II")
+
+
+def _enc(seq):
+    return _VAL.pack(seq & 0xFFFFFFFF, seq & 0xFFFFFFFF)
+
+
+def _dec(raw):
+    a, b = _VAL.unpack_from(raw, 0)
+    return a, a != b
+
+
+def build(n_compute=2, n_mem=2, n_shards=4, n_buckets=64, seed_keys=32):
+    cluster = make_cluster(n_nodes=n_compute + n_mem, n_meta=1)
+    mem = [f"n{i}" for i in range(n_compute, n_compute + n_mem)]
+    svc = DkvService(cluster, mem, n_shards=n_shards, n_buckets=n_buckets)
+    for k in range(1, seed_keys + 1):
+        svc.seed(k, bytes([k % 250 + 1]))
+    return cluster, svc, mem
+
+
+# ------------------------------------------------- directory + bootstrap
+def test_bootstrap_resolves_all_shards_and_serves():
+    cluster, svc, _mem = build()
+    env = cluster.env
+    out = {}
+
+    def scenario():
+        cl = DkvClient(cluster.module("n0"))
+        us = yield from cl.bootstrap()
+        out["us"] = us
+        routes = []
+        for sid in range(svc.n_shards):
+            route = yield from cl.dir.resolve(sid)
+            routes.append(route.node)
+        out["routes"] = routes
+        vals = yield from cl.get_many(list(range(1, 17)))
+        out["vals"] = vals
+        out["missing"] = yield from cl.get(9_999)
+        return True
+
+    env.run_process(scenario(), "s")
+    # microsecond attach: the whole shard map in well under a millisecond
+    assert out["us"] < 100.0, out["us"]
+    assert out["routes"] == [svc.owner(s) for s in range(svc.n_shards)]
+    assert out["vals"] == [bytes([k % 250 + 1]) for k in range(1, 17)]
+    assert out["missing"] is None
+
+
+def test_directory_cache_hits_after_bootstrap():
+    cluster, svc, _mem = build()
+    env = cluster.env
+    out = {}
+
+    def scenario():
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        misses0 = cl.dir.cache.misses
+        for _ in range(8):
+            yield from cl.get(3)
+        out["extra_misses"] = cl.dir.cache.misses - misses0
+        out["hits"] = cl.dir.cache.hits
+        return True
+
+    env.run_process(scenario(), "s")
+    assert out["extra_misses"] == 0       # steady state: zero directory reads
+    assert out["hits"] >= 8
+
+
+def test_put_then_get_roundtrip_one_sided():
+    cluster, svc, _mem = build()
+    env = cluster.env
+    out = {}
+
+    def scenario():
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        yield from cl.put(500, b"hello")
+        out["v"] = yield from cl.get(500)
+        yield from cl.put(500, b"world")   # update in place
+        out["v2"] = yield from cl.get(500)
+        return True
+
+    env.run_process(scenario(), "s")
+    assert out["v"] == b"hello"
+    assert out["v2"] == b"world"
+    # the server-side store really holds it (one-sided write landed)
+    st = svc.stores[svc.shard_of(500)]
+    assert st.version > 0
+
+
+# ------------------------------------------------- cache invalidation (S3)
+def test_dircache_invalidated_on_shard_map_epoch_bump():
+    cache = DirCache()
+    cluster, svc, mem = build()
+    env = cluster.env
+    out = {}
+
+    def scenario():
+        cl = DkvClient(cluster.module("n0"), cache=cache)
+        yield from cl.bootstrap()
+        key = 7
+        sid = svc.shard_of(key)
+        out["old_node"] = (yield from cl.dir.resolve(sid)).node
+        dst = mem[1] if out["old_node"] == mem[0] else mem[0]
+        yield from svc.migrate(cluster.module("n1"), sid, dst)
+        # observing the bumped service epoch must drop the stale route
+        # BEFORE any lookup is attempted with it
+        yield from cl.dir.service_info()
+        out["cached_after_bump"] = cache.get(sid)
+        out["val"] = yield from cl.get(key)
+        out["new_node"] = (yield from cl.dir.resolve(sid)).node
+        out["redirects"] = cl.stat_redirects
+        return True
+
+    env.run_process(scenario(), "s")
+    assert out["cached_after_bump"] is None
+    assert out["val"] == bytes([7 % 250 + 1])
+    assert out["new_node"] != out["old_node"]
+    # epoch-bump invalidation means the lookup went straight to the new
+    # owner — no redirect bounce off the MOVED tombstone
+    assert out["redirects"] == 0
+
+
+def test_dircache_never_routes_to_dead_or_former_owner():
+    cluster, svc, mem = build()
+    env = cluster.env
+    out = {}
+
+    def scenario():
+        m0 = cluster.module("n0")
+        cl = DkvClient(m0)
+        yield from cl.bootstrap()
+        key = 7
+        sid = svc.shard_of(key)
+        old = (yield from cl.dir.resolve(sid)).node
+        dst = mem[1] if old == mem[0] else mem[0]
+        yield from svc.migrate(cluster.module("n1"), sid, dst)
+        # the former owner dies; the death hook must purge its routes
+        cluster.node(old).alive = False
+        m0.on_node_death(old)
+        out["cached"] = cl.dir.cache.get(sid)
+        ops_before = {n: s.stat_ops for n, s in cl._sessions.items()}
+        out["val"] = yield from cl.get(key)
+        out["old"] = old
+        # not one session op went to the dead node
+        dead_sess = cl._sessions.get(old)
+        out["ops_to_dead"] = 0 if dead_sess is None else \
+            dead_sess.stat_ops - ops_before.get(old, 0)
+        return True
+
+    env.run_process(scenario(), "s")
+    assert out["cached"] is None          # death hook purged the route
+    assert out["val"] == bytes([7 % 250 + 1])
+    assert out["ops_to_dead"] == 0
+
+
+def test_stale_cached_route_redirects_via_moved_tombstone():
+    """A client that NEVER refreshes its epoch still converges: the
+    fenced lookup reads the MOVED state word and redirects."""
+    cluster, svc, mem = build()
+    env = cluster.env
+    out = {}
+
+    def scenario():
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        key = 7
+        sid = svc.shard_of(key)
+        old_store = svc.stores[sid]
+        out["old_node"] = old_store.node.name
+        dst = mem[1] if old_store.node.name == mem[0] else mem[0]
+        yield from svc.migrate(cluster.module("n1"), sid, dst)
+        # cache still holds the pre-migration route — no epoch observe
+        out["val"] = yield from cl.get(key)
+        out["redirects"] = cl.stat_redirects
+        st, _ep = parse_state(old_store.read_state_word())
+        out["old_state"] = st
+        out["new_node"] = (yield from cl.dir.resolve(sid)).node
+        return True
+
+    env.run_process(scenario(), "s")
+    assert out["val"] == bytes([7 % 250 + 1])
+    assert out["redirects"] >= 1
+    assert out["old_state"] == STATE_MOVED
+    assert out["new_node"] != out["old_node"]
+
+
+# ------------------------------------------------- live resharding (prop)
+def test_live_migration_linearizable_vs_sequential_oracle():
+    """Lookups racing a live shard move match a sequential oracle:
+    every read's value is bounded by the writer's completed/started
+    puts, and NO read is torn (mixed halves)."""
+    cluster, svc, mem = build(n_shards=2, n_buckets=64, seed_keys=8)
+    env = cluster.env
+    key = 7
+    sid = svc.shard_of(key)
+    svc.seed(key, _enc(0))
+    puts, reads = [], []
+    state = {"stop": False, "win": None}
+
+    def writer():
+        cl = DkvClient(cluster.module("n1"))
+        yield from cl.bootstrap()
+        seq = 0
+        while not state["stop"]:
+            seq += 1
+            t0 = env.now
+            yield from cl.put(key, _enc(seq))
+            puts.append((t0, env.now, seq))
+            yield env.timeout(4.0)
+
+    def mover():
+        while len(reads) < 20:
+            yield env.timeout(5.0)
+        dst = mem[1] if svc.owner(sid) == mem[0] else mem[0]
+        t0 = env.now
+        yield from svc.migrate(cluster.module("n1"), sid, dst)
+        state["win"] = (t0, env.now)
+
+    def reader():
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        mp = env.process(mover(), "mover")
+        for _ in range(70):
+            t0 = env.now
+            raw = yield from cl.get(key)
+            seq, torn = _dec(raw)
+            reads.append((t0, env.now, seq, torn))
+            yield env.timeout(2.0)
+        state["stop"] = True
+        yield mp
+        return True
+
+    def scenario():
+        wp = env.process(writer(), "writer")
+        yield env.process(reader(), "reader")
+        yield wp
+        # quiescent final read: must equal the writer's LAST completed put
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        raw = yield from cl.get(key)
+        return _dec(raw)
+
+    final_seq, final_torn = env.run_process(scenario(), "prop")
+
+    assert state["win"] is not None, "migration never ran"
+    lo, hi = state["win"]
+    overlapped = [r for r in reads if r[1] >= lo and r[0] <= hi]
+    assert overlapped, "no read overlapped the migration window"
+    assert sum(1 for r in reads if r[3]) == 0, "torn read"
+    for t0, t1, seq, _ in reads:
+        floor = max([s for (_i, pr, s) in puts if pr <= t0], default=0)
+        ceil = max([s for (pi, _r, s) in puts if pi <= t1], default=0)
+        assert floor <= seq <= ceil, \
+            (t0, t1, seq, floor, ceil, "non-linearizable read")
+    # the data survived the move: the quiescent value is the last put
+    assert not final_torn
+    assert final_seq == max(s for (_i, _r, s) in puts)
+
+
+def test_migration_moves_every_key_and_writes_continue():
+    cluster, svc, mem = build(n_shards=2, n_buckets=64, seed_keys=48)
+    env = cluster.env
+    out = {}
+
+    def scenario():
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        for sid in range(svc.n_shards):
+            dst = mem[1] if svc.owner(sid) == mem[0] else mem[0]
+            rep = yield from svc.migrate(cluster.module("n1"), sid, dst)
+            assert rep.copy_rounds >= 1
+        vals = yield from cl.get_many(list(range(1, 49)))
+        out["vals"] = vals
+        # writes keep landing at the new owners
+        yield from cl.put(1, b"post-mig")
+        out["post"] = yield from cl.get(1)
+        out["states"] = [parse_state(
+            svc.stores[s].read_state_word())[0]
+            for s in range(svc.n_shards)]
+        return True
+
+    env.run_process(scenario(), "s")
+    assert out["vals"] == [bytes([k % 250 + 1]) for k in range(1, 49)]
+    assert out["post"] == b"post-mig"
+    assert all(s == STATE_SERVING for s in out["states"])
+
+
+def test_migrate_rejects_non_serving_shard_and_thaws_on_abort():
+    from repro.kvs.race import STATE_FROZEN, state_word
+
+    cluster, svc, mem = build(n_shards=1)
+    env = cluster.env
+
+    def scenario():
+        sid = 0
+        store = svc.stores[sid]
+        dst = mem[1] if store.node.name == mem[0] else mem[0]
+        # (a) a concurrently-frozen shard fails the freeze CAS loudly —
+        # no silent double-migration, and the state word is untouched
+        store.set_state_local(STATE_FROZEN)
+        with pytest.raises(DkvError):
+            yield from svc.migrate(cluster.module("n1"), sid, dst)
+        assert store.read_state_word() == state_word(STATE_FROZEN,
+                                                     store.epoch)
+        store.set_state_local(STATE_SERVING)
+        # (b) an abort AFTER the freeze thaws the source back to
+        # SERVING: the quiesce bound of 0 passes trips immediately
+        with pytest.raises(DkvError):
+            yield from svc.migrate(cluster.module("n1"), sid, dst,
+                                   max_rounds=0)
+        assert store.read_state_word() == state_word(STATE_SERVING,
+                                                     store.epoch)
+        # (c) and the shard still serves + migrates normally afterwards
+        rep = yield from svc.migrate(cluster.module("n1"), sid, dst)
+        assert rep.dst == dst
+        cl = DkvClient(cluster.module("n0"))
+        yield from cl.bootstrap()
+        v = yield from cl.get(1)
+        assert v == bytes([1 % 250 + 1])
+        return True
+
+    env.run_process(scenario(), "s")
+
+
+# ------------------------------------------------------ worker-pull scaler
+def test_autoscaler_scales_out_under_spike_and_drains():
+    cluster, svc, _mem = build(n_shards=2)
+    env = cluster.env
+    queues = [PullQueue(env, f"s{i}") for i in range(2)]
+    served_keys = []
+
+    def spawn(queue):
+        cl = DkvClient(cluster.module("n0"))
+        yield env.timeout(cluster.fabric.cm.fork_worker_us)
+        yield from cl.bootstrap()
+
+        def serve(key):
+            v = yield from cl.get(int(key))
+            assert v is not None
+            served_keys.append(int(key))
+            yield env.timeout(1_000.0)        # simulated function body
+
+        return serve
+
+    scaler = WorkerPullAutoscaler(env, queues, spawn, min_workers=1,
+                                  max_workers=4, target_pressure=2,
+                                  check_period_us=500.0).start()
+
+    def scenario():
+        keys = [1 + (i % 16) for i in range(24)]
+        for i, k in enumerate(keys):          # burst: all at once
+            queues[shard_of_key(k, svc.n_shards) % 2].put(k)
+        while not all(q.done for q in queues):
+            yield env.timeout(250.0)
+        scaler.stop()
+        scaler.stop_workers()
+        return True
+
+    env.run_process(scenario(), "scale")
+    s = scaler.summary()
+    assert s["served"] == s["enqueued"] == 24
+    assert s["workers_peak"] > 2, "burst never scaled the fleet out"
+    assert sorted(served_keys) == sorted([1 + (i % 16) for i in range(24)])
+
+
+def test_autoscaler_scales_back_in_when_idle():
+    cluster, svc, _mem = build(n_shards=1)
+    env = cluster.env
+    q = PullQueue(env, "q")
+
+    def spawn(queue):
+        yield env.timeout(10.0)
+
+        def serve(item):
+            yield env.timeout(500.0)
+
+        return serve
+
+    scaler = WorkerPullAutoscaler(env, [q], spawn, min_workers=1,
+                                  max_workers=4, target_pressure=1,
+                                  check_period_us=200.0,
+                                  idle_checks_to_scale_in=3).start()
+
+    def scenario():
+        for i in range(12):
+            q.put(i)
+        while not q.done:
+            yield env.timeout(100.0)
+        # idle long enough for scale-in decisions
+        yield env.timeout(3_000.0)
+        scaler.stop()
+        scaler.stop_workers()
+        return True
+
+    env.run_process(scenario(), "scalein")
+    s = scaler.summary()
+    assert s["served"] == 12
+    assert s["retires"] >= 1, "idle fleet never scaled in"
+
+
+def test_gateway_worker_pull_mode_serves_trace():
+    from repro.serverless import (ContainerPool, InvocationGateway,
+                                  default_registry)
+
+    cluster = make_cluster(n_nodes=3, n_meta=1)
+    reg = default_registry(payload_bytes=256)
+    pool = ContainerPool(cluster, "krcore")
+    gw = InvocationGateway(cluster, reg, pool, worker_nodes=["n0", "n1"],
+                           data_node="n2")
+    arrivals = [i * 400.0 for i in range(12)]
+
+    def scenario():
+        return (yield from gw.submit_trace_pull(
+            "extract", arrivals, payload_bytes=256, max_workers=4,
+            check_period_us=500.0))
+
+    recs = cluster.env.run_process(scenario(), "pull")
+    assert len(recs) == 12
+    assert gw.last_autoscaler.summary()["served"] == 12
+    for r in recs:
+        assert r.end_us >= r.start_us >= r.arrival_us
+        assert r.compute_us > 0

@@ -120,3 +120,91 @@ def test_wkv_chunked_jnp_matches_sequential_strong_decay():
     assert np.isfinite(np.array(o_ref)).all()
     np.testing.assert_allclose(np.array(o_ref), np.array(o_seq),
                                atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("ns,nb,nslot,vdim", [
+    (3, 64, 8, 64), (2, 32, 4, 128), (5, 16, 8, 32),
+])
+def test_race_lookup_sharded_matches_per_shard_oracle(ns, nb, nslot, vdim):
+    """Sharded kernel (grid dimension over shards, per-shard index map)
+    vs the per-shard ref oracle and the kept scalar fallback — including
+    ragged per-shard query counts and one shard with NO queries."""
+    from repro.kernels.race_lookup.ops import race_lookup_sharded
+
+    rng = np.random.RandomState(ns * nb)
+    fps_t, vals_t, preps = [], [], []
+    inserted = {}
+    for s in range(ns):
+        keys = rng.choice(np.arange(1, 5_000), size=nb * nslot // 4,
+                          replace=False)
+        vals = rng.randn(len(keys), vdim).astype(np.float32)
+        fp, vt, prep = make_table(nb, nslot, vdim, keys, vals)
+        fps_t.append(fp)
+        vals_t.append(vt)
+        preps.append(prep)
+        inserted[s] = dict(zip((int(k) for k in keys), vals))
+    fp_tables = np.stack(fps_t)
+    val_tables = np.stack(vals_t)
+
+    # ragged shard loads; shard 0 gets NO queries
+    qkeys, qsidx = [], []
+    for s in range(1, ns):
+        n_s = 5 + 11 * s
+        ks = rng.choice(np.arange(1, 5_000), size=n_s)
+        qkeys.append(ks)
+        qsidx.append(np.full(n_s, s))
+    qkeys = np.concatenate(qkeys)
+    qsidx = np.concatenate(qsidx).astype(np.int32)
+    order = rng.permutation(len(qkeys))       # interleave shards
+    qkeys, qsidx = qkeys[order], qsidx[order]
+
+    fps = np.zeros(len(qkeys), np.int32)
+    bidx = np.zeros((len(qkeys), 2), np.int32)
+    for i, (k, s) in enumerate(zip(qkeys, qsidx)):
+        f, b = preps[s](np.array([k]))
+        fps[i] = f[0]
+        bidx[i] = b[0]
+
+    v_sh, f_sh = race_lookup_sharded(fp_tables, val_tables, fps, bidx,
+                                     qsidx, impl="pallas", qblock=16)
+    v_sc, f_sc = race_lookup_sharded(fp_tables, val_tables, fps, bidx,
+                                     qsidx, impl="pallas_scalar")
+    v_rf, f_rf = race_lookup_sharded(fp_tables, val_tables, fps, bidx,
+                                     qsidx, impl="ref")
+    np.testing.assert_array_equal(np.array(f_sh), np.array(f_rf))
+    np.testing.assert_array_equal(np.array(f_sc), np.array(f_rf))
+    np.testing.assert_allclose(np.array(v_sh), np.array(v_rf), atol=1e-6)
+    np.testing.assert_allclose(np.array(v_sc), np.array(v_rf), atol=1e-6)
+    # ground truth: inserted keys found in THEIR shard's table only
+    for i, (k, s) in enumerate(zip(qkeys, qsidx)):
+        if int(k) in inserted[s]:
+            assert np.array(f_rf)[i] == 1
+            np.testing.assert_allclose(np.array(v_sh)[i],
+                                       inserted[s][int(k)], atol=1e-6)
+
+
+def test_race_lookup_sharded_empty_and_device_table():
+    from repro.kernels.race_lookup.ops import race_lookup_sharded
+    from repro.kvs.race import ShardedDeviceRaceTable
+
+    fp = np.zeros((2, 8, 4), np.int32)
+    vt = np.zeros((2, 8, 4, 16), np.float32)
+    v, f = race_lookup_sharded(fp, vt, np.zeros(0, np.int32),
+                               np.zeros((0, 2), np.int32),
+                               np.zeros(0, np.int32))
+    assert v.shape == (0, 16) and f.shape == (0,)
+
+    table = ShardedDeviceRaceTable(n_shards=3, n_buckets=32, nslot=8,
+                                   vdim=32)
+    rng = np.random.RandomState(9)
+    vals = {k: rng.randn(32).astype(np.float32) for k in range(1, 60)}
+    for k, v_ in vals.items():
+        table.insert(k, v_)
+    qk = np.concatenate([np.arange(1, 60), np.arange(900, 910)])
+    got_v, got_f = table.lookup_batch(qk, impl="pallas")
+    ref_v, ref_f = table.lookup_batch(qk, impl="ref")
+    np.testing.assert_array_equal(np.array(got_f), np.array(ref_f))
+    np.testing.assert_allclose(np.array(got_v), np.array(ref_v), atol=1e-6)
+    assert np.array(got_f)[:59].all() and not np.array(got_f)[59:].any()
+    for i, k in enumerate(range(1, 60)):
+        np.testing.assert_allclose(np.array(got_v)[i], vals[k], atol=1e-6)

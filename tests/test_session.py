@@ -943,3 +943,99 @@ def test_meta_kvclient_rides_raw_session_same_budget():
         return True
 
     assert cluster.env.run_process(scenario(), "s")
+
+
+# ===================================== listener epoch handshake (leases)
+def test_crash_restart_epoch_drops_stale_reply_for_reused_call_id():
+    """Fault injection: a client crashes mid-call and restarts REUSING
+    the same session id (qd) and the same call-id — the paper's lease
+    hazard. The old incarnation's late reply must be dropped by the
+    epoch handshake, never resolve the reincarnated call."""
+    import itertools
+
+    from repro.core import Session, from_qd
+
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    out = {}
+
+    def server():
+        lst = yield from listen(m1, 7, window=8)
+        # serve BOTH incarnations' requests, oldest first, after a delay
+        # long enough that the restart happens in between
+        msgs = []
+        while len(msgs) < 2:
+            msgs.extend((yield from lst.recv()))
+        yield env.timeout(5.0)
+        for msg in msgs:
+            yield from msg.reply(bytes(msg.payload) + b"-reply")
+        return True
+
+    def client():
+        sess_a = yield from connect(m0, "n1", port=7)
+        qd = sess_a.qd
+        fut_a = sess_a.call(b"old")
+        yield env.timeout(3.0)          # request is on the wire
+        # --- crash: the process dies; the kernel reclaims the session.
+        sess_a.close()
+        # --- restart: same qd, and (the hazard) the SAME call-id space
+        old_cid = next(Session._call_ids) - 1
+        Session._call_ids = itertools.count(old_cid)
+        sess_b = from_qd(m0, qd)
+        assert sess_b.epoch > sess_a.epoch
+        fut_b = sess_b.call(b"new")
+        reply = yield from fut_b.wait()
+        out["payload"] = bytes(reply.payload)
+        out["stale"] = sess_b.stat_stale_replies
+        assert fut_a.done and fut_a.error is not None
+        return True
+
+    env.process(server(), "srv")
+    env.process(client(), "cli")
+    env.run()
+    # the old incarnation's reply carried the OLD epoch: dropped, and the
+    # reincarnated call resolved with ITS OWN reply
+    assert out["payload"] == b"new-reply"
+    assert out["stale"] == 1
+
+
+def test_listener_drops_requests_from_stale_incarnation():
+    """Once a restarted incarnation (higher epoch) has contacted the
+    listener, a zombie message from the previous incarnation of the SAME
+    session id is dropped unserved (its reply could race the restarted
+    client's calls)."""
+    from repro.core import from_qd
+
+    cluster = build_cluster()
+    env = cluster.env
+    m0, m1 = cluster.module("n0"), cluster.module("n1")
+    out = {}
+
+    def server():
+        lst = yield from listen(m1, 9, window=8)
+        out["lst"] = lst
+        msgs = yield from lst.recv()
+        out["served"] = [bytes(m.payload) for m in msgs]
+        # drain window: give the zombie message time to arrive + be dropped
+        yield env.timeout(10.0)
+        more = yield from lst.recv(wait=False)
+        out["served"] += [bytes(m.payload) for m in more]
+        return True
+
+    def client():
+        sess_a = yield from connect(m0, "n1", port=9)
+        qd = sess_a.qd
+        # crash-restart BEFORE anything was sent; the zombie A lingers
+        sess_b = from_qd(m0, qd)
+        yield from sess_b.send(b"from-b").wait()
+        yield env.timeout(5.0)
+        # zombie from the dead incarnation (lower epoch, same src_vq)
+        yield from sess_a.send(b"zombie-a").wait()
+        return True
+
+    env.process(server(), "srv")
+    env.process(client(), "cli")
+    env.run()
+    assert out["served"] == [b"from-b"]
+    assert out["lst"].stat_stale_msgs == 1

@@ -118,16 +118,89 @@ def check_hardened_rpc_surface() -> int:
     return bad
 
 
+def check_dkv_surface() -> int:
+    """Check #4: the elastic-dkv public surface is complete and its wire
+    formats hold — ShardRecord fills a DrTM-KV slot exactly, the fenced
+    shard client and sharded kernel exist, and the client/service expose
+    the bootstrap / migration / autoscaling entry points."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    bad = 0
+    import repro.dkv as dkv
+    from repro.core.meta import MAX_VAL, ShardRecord
+    from repro.kernels.race_lookup import ops as kops
+    from repro.kvs import race as race_mod
+
+    for name in ("DkvService", "DkvClient", "DirectoryClient", "DirCache",
+                 "Directory", "ShardRoute", "DkvError", "PullQueue",
+                 "PullWorker", "WorkerPullAutoscaler", "MigrationReport"):
+        if getattr(dkv, name, None) is None:
+            print(f"FAIL: repro.dkv.{name} missing")
+            bad += 1
+    rec = ShardRecord(epoch=3, node_id=7, table_rkey=11, ctl_rkey=13,
+                      n_buckets=256)
+    packed = rec.pack()
+    if len(packed) != MAX_VAL:
+        print(f"FAIL: ShardRecord packs to {len(packed)}B, must fill a "
+              f"DrTM-KV slot value ({MAX_VAL}B)")
+        bad += 1
+    if ShardRecord.unpack(packed) != rec:
+        print("FAIL: ShardRecord pack/unpack roundtrip broken")
+        bad += 1
+    for name in ("ShardClient", "ShardedDeviceRaceTable", "STATE_SERVING",
+                 "STATE_FROZEN", "STATE_MOVED", "state_word",
+                 "parse_state", "shard_of_key"):
+        if getattr(race_mod, name, None) is None:
+            print(f"FAIL: repro.kvs.race.{name} missing (shard-aware "
+                  f"client surface)")
+            bad += 1
+    for meth in ("lookup_fenced", "insert_fenced"):
+        if not callable(getattr(race_mod.ShardClient, meth, None)):
+            print(f"FAIL: ShardClient.{meth} missing (migration fence)")
+            bad += 1
+    if not callable(getattr(kops, "race_lookup_sharded", None)):
+        print("FAIL: race_lookup_sharded missing (per-shard index map "
+              "kernel)")
+        bad += 1
+    for meth in ("bootstrap", "get", "put"):
+        if not callable(getattr(dkv.DkvClient, meth, None)):
+            print(f"FAIL: DkvClient.{meth} missing")
+            bad += 1
+    mig_params = inspect.signature(dkv.DkvService.migrate).parameters
+    for param in ("sid", "dst_name"):
+        if param not in mig_params:
+            print(f"FAIL: DkvService.migrate missing the {param!r} "
+                  f"parameter")
+            bad += 1
+    import repro.core as core
+    if not callable(getattr(core.KRCoreModule, "add_death_hook", None)) \
+            or not callable(getattr(core.KRCoreModule, "meta_client",
+                                    None)):
+        print("FAIL: KRCoreModule death-hook / meta_client surface "
+              "missing")
+        bad += 1
+    if not hasattr(core.Session, "epoch"):
+        # class attr check: instances carry .epoch (set in __init__) —
+        # verify the __init__ accepts it instead
+        if "epoch" not in inspect.signature(
+                core.Session.__init__).parameters:
+            print("FAIL: Session epoch handshake surface missing")
+            bad += 1
+    return bad
+
+
 def main() -> int:
     bad = scan_raw_callsites()
     bad += check_legacy_warns_once()
     bad += check_hardened_rpc_surface()
+    bad += check_dkv_surface()
     if bad:
         print(f"api-surface check FAILED ({bad} violation(s))")
         return 1
     print("api-surface check OK: clients are session-only outside core/, "
           "legacy shim warns once, hardened RPC surface "
-          "(CallTimeout/Cancelled/deadline/retries/faa/cancel) complete")
+          "(CallTimeout/Cancelled/deadline/retries/faa/cancel) complete, "
+          "dkv surface (ShardRecord/ShardClient/DkvClient/DkvService/"
+          "autoscaler + sharded kernel) pinned")
     return 0
 
 
